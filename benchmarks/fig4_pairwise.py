@@ -1,0 +1,121 @@
+"""Fig. 4 reproduction: pairwise comparison of the paper's 15 method
+configurations over the §V.B testbed with an evaluation budget of 1000*D,
+sign / signed-rank / t tests at 95%.
+
+The paper runs 1000-D with 1M evaluations x 10 repeats (hours per cell on a
+laptop-class JVM); this harness exposes the identical protocol with
+--dim/--repeats/--budget-scale knobs so the CPU container runs a reduced but
+statistically identical pipeline, and a pod runs the full one.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.stats import sign_test, signed_rank_test, t_test
+from repro.core import ALGORITHMS, IslandConfig, IslandOptimizer
+from repro.core.coupling import with_fcg_postprocessing
+from repro.functions import get
+from repro.optim import DescentConfig, asd, avd, fcg
+
+# the paper's Fig.4 configurations (§V.B items 1..15)
+METHOD_SETUP = {
+    "ga": dict(algo="ga", pop=100, params={"pc": 0.7, "pm": 0.1}),
+    "sa": dict(algo="sa", pop=100, params={"schedule": "linear", "T0": 1000.0}),
+    "ea": dict(algo="ea", pop=100, params={}),
+    "de": dict(algo="de", pop=100, params={"px": 0.8, "w": 0.9}),
+    "ps": dict(algo="pso", pop=10, params={"w": 0.6, "fp": 1.0, "fg": 1.0}),
+    "fa": dict(algo="fa", pop=50, params={"beta0": 1.0, "gamma": 200.0,
+                                          "delta": 0.97}),
+    "mc": dict(algo="mc", pop=100, params={}),
+}
+GRAD_METHODS = {"asd": asd, "avd": avd, "fcg": fcg}
+COMBOS = ["gafcg", "eafcg", "safcg", "defcg", "psfcg"]
+ALL_METHODS = list(METHOD_SETUP) + list(GRAD_METHODS) + COMBOS
+
+FUNCTIONS = ["ackley", "rastrigin", "rosenbrock", "dropwave", "schwefel",
+             "griewank", "trid", "michalewicz", "sphere", "weierstrass",
+             "lnd1", "lnd2", "lnd3", "lnd4", "lnd5", "lnd6", "lnd7"]
+
+
+def run_method(name: str, fname: str, dim: int, budget: int, seed: int) -> float:
+    f = get(fname, dim)
+    key = jax.random.PRNGKey(seed * 77 + hash(name + fname) % 1000)
+    if name in METHOD_SETUP:
+        m = METHOD_SETUP[name]
+        cfg = IslandConfig(n_islands=1, pop=m["pop"], dim=dim,
+                           migration="none", max_evals=budget)
+        params = dict(m["params"])
+        if m["algo"] == "sa":
+            params["n_gens_hint"] = max(budget // m["pop"], 1)
+        return IslandOptimizer(ALGORITHMS[m["algo"]], cfg,
+                               params=params).minimize(f, key).value
+    if name in GRAD_METHODS:
+        return GRAD_METHODS[name](f, key, dim,
+                                  DescentConfig(max_evals=budget)).value
+    # X/FCG combos: 50-50 budget split
+    base = name[:2].replace("ps", "pso")
+    base = {"ga": "ga", "ea": "ea", "sa": "sa", "de": "de", "pso": "pso"}[base]
+    m = METHOD_SETUP[{"pso": "ps"}.get(base, base)]
+    meta = IslandOptimizer(
+        ALGORITHMS[base],
+        IslandConfig(n_islands=1, pop=m["pop"], dim=dim, migration="none"),
+        params=m["params"])
+    return with_fcg_postprocessing(meta, f, key, dim, total_evals=budget).value
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dim", type=int, default=16)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--budget-scale", type=int, default=1000,
+                    help="evals = scale * dim (paper: 1000)")
+    ap.add_argument("--methods", default=None, help="comma list (default all 15)")
+    ap.add_argument("--functions", default=None)
+    ap.add_argument("--out", default="experiments/fig4.json")
+    args = ap.parse_args()
+
+    methods = args.methods.split(",") if args.methods else ALL_METHODS
+    fnames = args.functions.split(",") if args.functions else FUNCTIONS
+    budget = args.budget_scale * args.dim
+
+    results: dict[str, dict[str, list[float]]] = {m: {} for m in methods}
+    for m in methods:
+        for fn in fnames:
+            t0 = time.time()
+            vals = [run_method(m, fn, args.dim, budget, r)
+                    for r in range(args.repeats)]
+            results[m][fn] = vals
+            print(f"fig4 {m:7s} {fn:12s} mean={np.mean(vals):12.4g} "
+                  f"({time.time()-t0:.1f}s)", flush=True)
+
+    # pairwise matrix with the paper's notation: winner[s,sr,t]
+    matrix = {}
+    for i, a in enumerate(methods):
+        for b in methods[i + 1:]:
+            va = np.array([np.mean(results[a][fn]) for fn in fnames])
+            vb = np.array([np.mean(results[b][fn]) for fn in fnames])
+            wins_a = int(np.sum(va < vb))
+            winner = a if wins_a * 2 >= len(fnames) else b
+            tags = []
+            for tag, test in (("s", sign_test), ("sr", signed_rank_test),
+                              ("t", t_test)):
+                w, sig = test(va, vb)
+                if sig and ((w == "a") == (winner == a)):
+                    tags.append(tag)
+            matrix[f"{a}|{b}"] = f"{winner}[{','.join(tags)}]"
+    with open(args.out, "w") as fh:
+        json.dump({"dim": args.dim, "budget": budget,
+                   "repeats": args.repeats, "results": results,
+                   "matrix": matrix}, fh, indent=1)
+    print("\n== Fig.4 pairwise matrix ==")
+    for k, v in matrix.items():
+        print(f"  {k:16s} -> {v}")
+
+
+if __name__ == "__main__":
+    main()

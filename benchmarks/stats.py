@@ -1,0 +1,67 @@
+"""Paired statistical tests used by Fig. 4: sign test, Wilcoxon signed-rank,
+and Student t — implemented from scratch (offline container, no scipy)."""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+def sign_test(a: np.ndarray, b: np.ndarray, alpha: float = 0.05):
+    """Two-sided exact binomial sign test on paired samples (a vs b).
+    Returns (winner, significant): winner 'a' if a tends to be LOWER."""
+    diff = a - b
+    n_pos = int(np.sum(diff > 0))
+    n_neg = int(np.sum(diff < 0))
+    n = n_pos + n_neg
+    if n == 0:
+        return "tie", False
+    k = min(n_pos, n_neg)
+    # P(X <= k) for X ~ Bin(n, 1/2), two-sided
+    p = sum(math.comb(n, i) for i in range(k + 1)) / 2 ** n * 2
+    winner = "a" if n_neg > n_pos else ("b" if n_pos > n_neg else "tie")
+    return winner, p < alpha
+
+
+def signed_rank_test(a: np.ndarray, b: np.ndarray, alpha: float = 0.05):
+    """Wilcoxon signed-rank with normal approximation (ties dropped)."""
+    diff = a - b
+    diff = diff[diff != 0]
+    n = diff.size
+    if n == 0:
+        return "tie", False
+    ranks = np.empty(n)
+    order = np.argsort(np.abs(diff))
+    sorted_abs = np.abs(diff)[order]
+    # average ranks for ties
+    i = 0
+    while i < n:
+        j = i
+        while j + 1 < n and sorted_abs[j + 1] == sorted_abs[i]:
+            j += 1
+        ranks[order[i:j + 1]] = (i + j) / 2 + 1
+        i = j + 1
+    w_pos = float(np.sum(ranks[diff > 0]))
+    w_neg = float(np.sum(ranks[diff < 0]))
+    w = min(w_pos, w_neg)
+    mu = n * (n + 1) / 4
+    sigma = math.sqrt(n * (n + 1) * (2 * n + 1) / 24)
+    if sigma == 0:
+        return "tie", False
+    z = (w - mu) / sigma
+    p = 2 * 0.5 * math.erfc(abs(z) / math.sqrt(2))
+    winner = "a" if w_neg > w_pos else ("b" if w_pos > w_neg else "tie")
+    return winner, p < alpha
+
+
+def t_test(a: np.ndarray, b: np.ndarray, alpha: float = 0.05):
+    """Paired t-test with a normal-tail approximation for the p-value."""
+    d = a - b
+    n = d.size
+    if n < 2 or np.std(d, ddof=1) == 0:
+        return "tie", False
+    t = float(np.mean(d) / (np.std(d, ddof=1) / math.sqrt(n)))
+    # normal approximation of the t distribution tail (n small -> conservative)
+    p = 2 * 0.5 * math.erfc(abs(t) / math.sqrt(2))
+    winner = "a" if np.mean(d) < 0 else "b"
+    return winner, p < alpha

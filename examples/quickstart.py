@@ -1,0 +1,31 @@
+"""Quickstart: minimize a benchmark function with three of the library's
+island-model meta-heuristics and refine with conjugate gradient.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.core import ALGORITHMS, IslandConfig, IslandOptimizer, ObserverHub
+from repro.core.coupling import observed_local_search
+from repro.functions import get
+
+DIM = 12
+f = get("rastrigin")
+key = jax.random.PRNGKey(0)
+
+print(f"minimizing {f.name} in {DIM}-D, box [{f.lo}, {f.hi}]  (f* = 0)\n")
+
+# the Observer pattern: every new incumbent triggers an FCG local search
+hub = ObserverHub()
+observed_local_search(f, DIM, hub, budget_per_refine=2000)
+
+for name in ("de", "pso", "sa"):
+    cfg = IslandConfig(n_islands=4, pop=32, dim=DIM, sync_every=10,
+                       migration="ring", max_evals=40_000)
+    res = IslandOptimizer(ALGORITHMS[name], cfg).minimize(
+        f, jax.random.fold_in(key, hash(name) % 1000))
+    arg, val = hub.notify(res.arg, res.value)
+    print(f"{name:4s} islands=4 best={res.value:10.4f} "
+          f"after observer refine -> {val:10.4f}  ({res.n_evals} evals)")
+
+print(f"\nglobal incumbent: {hub.best_val:.6f}")

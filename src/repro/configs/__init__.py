@@ -1,0 +1,29 @@
+"""Architecture registry: ``--arch <id>`` resolves here."""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+ARCHS: dict[str, str] = {
+    "internvl2-2b": "repro.configs.internvl2_2b",
+    "musicgen-medium": "repro.configs.musicgen_medium",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "llama4-scout-17b-a16e": "repro.configs.llama4_scout_17b_a16e",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2_7b",
+    "gemma2-9b": "repro.configs.gemma2_9b",
+    "granite-3-8b": "repro.configs.granite_3_8b",
+    "llama3.2-1b": "repro.configs.llama3_2_1b",
+    "gemma-7b": "repro.configs.gemma_7b",
+    "mamba2-370m": "repro.configs.mamba2_370m",
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return importlib.import_module(ARCHS[name]).CONFIG
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {name: get_config(name) for name in ARCHS}

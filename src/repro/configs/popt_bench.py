@@ -1,0 +1,23 @@
+"""popt-bench — the paper's own production workload (§V.A, Table I):
+
+single-island DDE on the CEC'2008 shifted Rosenbrock in 1000 dimensions,
+population 800, 20000 generations, px=0.2, w=0.5, "non-determinism-ok".
+On the production mesh the population axis shards over all devices (the
+paper's distributed function-evaluation network).
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PoptBenchConfig:
+    dim: int = 1000
+    pop: int = 800
+    n_gens: int = 20_000
+    w: float = 0.5
+    px: float = 0.2
+    strategy: str = "rand1bin"
+    barrier_mode: str = "chunked"   # "non-determinism-ok" = true
+    function: str = "shifted_rosenbrock"
+
+
+CONFIG = PoptBenchConfig()

@@ -1,0 +1,16 @@
+"""popt4jax core — the paper's contribution as composable JAX modules."""
+from repro.core import bh, de, ea, fa, ga, mc, pso, sa  # noqa: F401
+from repro.core.api import ObserverHub, OptimizeResult, Optimizer  # noqa: F401
+from repro.core.executor import ExecutorConfig, make_batch_evaluator  # noqa: F401
+from repro.core.islands import IslandConfig, IslandOptimizer, MetaHeuristic  # noqa: F401
+
+ALGORITHMS = {
+    "de": de.make,
+    "ga": ga.make,
+    "pso": pso.make,
+    "sa": sa.make,
+    "fa": fa.make,
+    "ea": ea.make,
+    "bh": bh.make,
+    "mc": mc.make,
+}

@@ -1,0 +1,75 @@
+"""popt4jlib top-level API, JAX-native.
+
+Java -> JAX mapping (see DESIGN.md §2):
+  FunctionIntf.eval(arg, params)        -> functions.Function (pure jnp callable)
+  OptimizerIntf.minimize(f)             -> Optimizer.minimize(f, key) -> OptimizeResult
+  PairObjDouble                         -> OptimizeResult(arg, value, ...)
+  setParams(HashMap) + OptimizerException -> frozen dataclass config per optimizer;
+      JAX optimizers are pure functions, so the paper's "setParams while minimize()
+      runs" race cannot exist — the config is immutable by construction.
+  ObserverIntf/SubjectIntf              -> ObserverHub (host-side) + incumbent
+      all-reduce at island sync rounds (device-side).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Protocol
+
+import jax
+import jax.numpy as jnp
+
+from repro.functions.benchmarks import Function
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class OptimizeResult:
+    """popt4jlib ``PairObjDouble``: best argument + value, plus run accounting."""
+
+    arg: Array                 # best argument found, shape (dim,)
+    value: float               # f(arg)
+    n_evals: int = 0           # function evaluations consumed (Fig. 4 budget unit)
+    n_gens: int = 0
+    history: Any = None        # optional per-sync-round incumbent trace
+
+
+class Optimizer(Protocol):
+    """popt4jlib ``OptimizerIntf``."""
+
+    def minimize(self, f: Function, key: Array) -> OptimizeResult: ...
+
+
+class ObserverHub:
+    """Observer design pattern (popt4jlib SubjectIntf/ObserverIntf).
+
+    Device-side incumbent sharing between islands is a pmin collective inside the
+    engine; *this* class is the host-side coupling between different optimizer
+    processes (e.g. a DGA subject notifying an FCG local-search observer whenever a
+    new incumbent appears — the paper's §IV.B coupling).
+    """
+
+    def __init__(self) -> None:
+        self._observers: list[Callable[[Array, float], tuple[Array, float] | None]] = []
+        self.best_arg: Array | None = None
+        self.best_val: float = float("inf")
+
+    def register(self, fn: Callable[[Array, float], tuple[Array, float] | None]) -> None:
+        self._observers.append(fn)
+
+    def notify(self, arg: Array, value: float) -> tuple[Array, float]:
+        """Called by a subject when it finds a new incumbent. Observers may refine
+        it (local search) and return an improved (arg, value)."""
+        if value < self.best_val:
+            self.best_arg, self.best_val = arg, float(value)
+            for obs in self._observers:
+                out = obs(arg, value)
+                if out is not None and float(out[1]) < self.best_val:
+                    self.best_arg, self.best_val = out[0], float(out[1])
+        return self.best_arg, self.best_val
+
+
+def lexi_min(val_a: Array, arg_a: Array, val_b: Array, arg_b: Array) -> tuple[Array, Array]:
+    """(value, arg) pairwise min by value — the incumbent-merge primitive."""
+    take_a = val_a <= val_b
+    return jnp.where(take_a, val_a, val_b), jnp.where(take_a, arg_a, arg_b)

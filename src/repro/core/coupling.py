@@ -1,0 +1,108 @@
+"""Optimizer coupling — the paper's Observer pattern and the Fig.4 X/FCG combos.
+
+popt4jlib couples a meta-heuristic (SubjectIntf) with a local-search optimizer
+(ObserverIntf): each new incumbent triggers a descent to the nearest saddle
+point. Fig.4's "GA/FCG (50-50 function evaluations)" splits the budget equally
+between the global phase and the FCG refinement phase; we reproduce exactly
+that protocol (refinement starts from the global phase's incumbent).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import ObserverHub, OptimizeResult
+from repro.core.islands import IslandConfig, IslandOptimizer
+from repro.functions.benchmarks import Function
+from repro.optim import descent
+
+Array = jax.Array
+
+
+def with_fcg_postprocessing(
+    meta: IslandOptimizer,
+    f: Function,
+    key: Array,
+    dim: int,
+    total_evals: int,
+    split: float = 0.5,
+    dcfg: descent.DescentConfig | None = None,
+) -> OptimizeResult:
+    """Fig.4 combo: meta-heuristic for ``split`` of the budget, FCG the rest."""
+    k1, k2 = jax.random.split(key)
+    meta_cfg = dataclasses.replace(meta.cfg, max_evals=int(total_evals * split))
+    global_phase = IslandOptimizer(meta.algo_maker, meta_cfg, meta.params, meta.mesh)
+    res = global_phase.minimize(f, k1)
+
+    budget_left = total_evals - res.n_evals
+    dcfg = dcfg or descent.DescentConfig()
+    dcfg = dataclasses.replace(dcfg, max_evals=budget_left)
+    # FCG refinement seeded at the meta-heuristic's incumbent (Observer hand-off).
+    refined = _fcg_from(f, res.arg, k2, dim, dcfg)
+    if refined.value < res.value:
+        return OptimizeResult(arg=refined.arg, value=refined.value,
+                              n_evals=res.n_evals + refined.n_evals)
+    return OptimizeResult(arg=res.arg, value=res.value,
+                          n_evals=res.n_evals + refined.n_evals)
+
+
+def _fcg_from(f: Function, x0: Array, key: Array, dim: int,
+              cfg: descent.DescentConfig) -> OptimizeResult:
+    """FCG with a fixed starting point (restarts remain random)."""
+    from repro.optim.numgrad import make_grad
+    grad_fn = make_grad(f.fn, cfg.grad_mode)
+
+    def run(x0, key):
+        fx0 = f.fn(x0)
+        g0, ge = grad_fn(x0)
+        c0 = descent._Carry(x0, fx0, g0, -g0, jnp.sum(g0 * g0),
+                            jnp.asarray(ge + 1), x0, fx0, key)
+
+        def cond(c):
+            return c.evals < cfg.max_evals
+
+        def body(c):
+            x1, f1, ls = descent._armijo(f.fn, c.x, c.fx, c.g, c.d, cfg)
+            g1, ge2 = grad_fn(x1)
+            gg1 = jnp.sum(g1 * g1)
+            b = gg1 / jnp.maximum(c.gg_prev, 1e-30)
+            d1 = -g1 + b * c.d
+            d1 = jnp.where(jnp.sum(d1 * g1) < 0, d1, -g1)
+            done = (jnp.sqrt(gg1) < cfg.gtol) | (f1 >= c.fx - 1e-15)
+            key, rk = jax.random.split(c.key)
+            xr = jax.random.uniform(rk, x1.shape, minval=f.lo, maxval=f.hi)
+            fr = f.fn(xr)
+            gr, ger = grad_fn(xr)
+            x2 = jnp.where(done, xr, x1)
+            f2 = jnp.where(done, fr, f1)
+            g2 = jnp.where(done, gr, g1)
+            d2 = jnp.where(done, -gr, d1)
+            gg2 = jnp.where(done, jnp.sum(gr * gr), gg1)
+            evals = c.evals + ls + ge2 + jnp.where(done, ger + 1, 0)
+            best = f2 < c.best_f
+            return descent._Carry(x2, f2, g2, d2, gg2, evals,
+                                  jnp.where(best, x2, c.best_x),
+                                  jnp.where(best, f2, c.best_f), key)
+
+        return jax.lax.while_loop(cond, body, c0)
+
+    if cfg.max_evals <= 0:
+        return OptimizeResult(arg=x0, value=float(f.fn(x0)), n_evals=1)
+    out = jax.jit(run)(x0, key)
+    return OptimizeResult(arg=out.best_x, value=float(out.best_f),
+                          n_evals=int(out.evals))
+
+
+def observed_local_search(f: Function, dim: int, hub: ObserverHub,
+                          budget_per_refine: int = 2000) -> None:
+    """Register an FCG observer on the hub: every incumbent notification is
+    refined to the nearest saddle point (the paper's AVD/FCG ObserverIntf)."""
+
+    def refine(arg: Array, value: float):
+        cfg = descent.DescentConfig(max_evals=budget_per_refine)
+        res = _fcg_from(f, arg, jax.random.PRNGKey(0), dim, cfg)
+        return (res.arg, res.value) if res.value < value else None
+
+    hub.register(refine)

@@ -1,0 +1,105 @@
+"""Distributed batch function evaluation — popt4jlib ``parallel.distributed`` in JAX.
+
+The Java library's ``PDBatchTaskExecutorSrv/Clt/Wrk`` network distributes an array of
+``TaskObject``s by splitting it into equal-size chunks, one per available worker, and
+re-submitting failed batches once. On a TPU mesh the worker pool is the mesh itself:
+
+  * equal-size chunking  -> sharding the population axis over a mesh axis
+                            (``shard_map`` with a padded, evenly divisible axis)
+  * init-cmd broadcast   -> replicated closure state (captured constants are
+                            broadcast to every device by XLA)
+  * retry-once-then-evict -> non-finite results are re-evaluated once on a slightly
+                            perturbed argument; still-bad results are marked +inf
+                            (the candidate is "evicted" from selection)
+  * accumulator/reducer  -> the caller reduces with jnp/min-collectives
+
+The executor is a *pure function* of its inputs, so XLA can fuse it into the
+surrounding generation step — the distributed map/reduce costs nothing extra when
+the mesh is trivial (CPU tests) and lowers to balanced SPMD on the pod.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.functions.benchmarks import Function
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutorConfig:
+    retry_bad: bool = True        # paper: resubmit a failed batch once
+    retry_eps: float = 1e-6       # perturbation used for the retry evaluation
+    mesh_axis: str | tuple[str, ...] | None = None  # population-sharding axis(es)
+
+
+def make_batch_evaluator(
+    f: Function,
+    cfg: ExecutorConfig = ExecutorConfig(),
+    mesh: Mesh | None = None,
+) -> Callable[[Array], Array]:
+    """Return ``evaluate(pop: (P, D)) -> (P,)`` with the executor semantics above."""
+
+    def _eval_once(pop: Array) -> Array:
+        return jax.vmap(f.fn)(pop)
+
+    def evaluate(pop: Array) -> Array:
+        fit = _eval_once(pop)
+        if cfg.retry_bad:
+            bad = ~jnp.isfinite(fit)
+            # Retry the failed "batch" once on a perturbed argument (the SPMD
+            # analogue of handing the task to another worker).
+            retried = _eval_once(pop + cfg.retry_eps)
+            fit = jnp.where(bad, retried, fit)
+            # Second failure -> evict from the candidate pool.
+            fit = jnp.where(jnp.isfinite(fit), fit, jnp.inf)
+        return fit
+
+    if mesh is None or cfg.mesh_axis is None:
+        return evaluate
+
+    axis = cfg.mesh_axis
+    spec_in = P(axis, None)
+    spec_out = P(axis)
+
+    def sharded_evaluate(pop: Array) -> Array:
+        # Equal-size chunks per worker: pad P to a multiple of the axis size.
+        n = 1
+        for a in (axis if isinstance(axis, tuple) else (axis,)):
+            n *= mesh.shape[a]
+        pcount = pop.shape[0]
+        pad = (-pcount) % n
+        padded = jnp.pad(pop, ((0, pad), (0, 0)))
+        out = jax.shard_map(
+            evaluate, mesh=mesh, in_specs=(spec_in,), out_specs=spec_out,
+        )(padded)
+        return out[:pcount]
+
+    return sharded_evaluate
+
+
+def distributed_map_reduce(
+    mesh: Mesh,
+    axis: str,
+    map_fn: Callable[[Array], Array],
+    reduce_op: str,
+    xs: Array,
+) -> Array:
+    """popt4jlib distributed map/reduce operator: map over the sharded leading axis,
+    reduce with a collective (the "accumulator server")."""
+
+    def body(chunk: Array) -> Array:
+        mapped = jax.vmap(map_fn)(chunk)
+        local = {"sum": jnp.sum, "min": jnp.min, "max": jnp.max}[reduce_op](mapped, axis=0)
+        return jax.lax.psum(local, axis) if reduce_op == "sum" else (
+            jax.lax.pmin(local, axis) if reduce_op == "min" else jax.lax.pmax(local, axis)
+        )
+
+    return jax.shard_map(
+        body, mesh=mesh, in_specs=(P(axis),), out_specs=P(), check_vma=False,
+    )(xs)

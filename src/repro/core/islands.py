@@ -1,0 +1,208 @@
+"""Island-model engine — the unified runtime behind DGA/DDE/DPSO/DSA/DEA/DFA/DGABH/MCS.
+
+Java design: one island per thread, migration over shared memory / sockets,
+fitness evaluation optionally farmed to a worker network.
+
+JAX design: islands are the leading axis of every state leaf, `vmap`-ed per
+generation and sharded over the mesh's (pod, data) axes; migration is an
+array roll/gather over that axis (lowers to collective-permute / all-gather);
+the incumbent all-reduce at each sync round realizes the Observer pattern
+between islands. One *sync round* = `sync_every` generations + migration +
+incumbent merge; rounds are host-level steps so the driver can checkpoint,
+couple optimizers (ObserverHub), and survive restarts at round granularity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import migration as mig
+from repro.core.api import OptimizeResult
+from repro.core.executor import ExecutorConfig, make_batch_evaluator
+from repro.functions.benchmarks import Function
+
+Array = jax.Array
+State = dict[str, Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class IslandConfig:
+    n_islands: int = 1
+    pop: int = 64                 # per-island population capacity
+    dim: int = 10
+    sync_every: int = 10          # generations between migration/incumbent rounds
+    migration: str = "ring"       # ring | starvation | none
+    n_migrants: int = 2           # paper: at most 2 leave an island per round
+    share_incumbent: bool = False # device-side Observer: broadcast global best
+    max_evals: int = 100_000      # Fig.4 budget unit: function evaluations
+    island_axes: tuple[str, ...] = ("data",)  # mesh axes the island dim shards over
+    pop_axes: tuple[str, ...] | None = None   # mesh axes the population dim shards
+                                              # over when n_islands == 1 (Table I)
+
+
+@dataclasses.dataclass(frozen=True)
+class MetaHeuristic:
+    """One meta-heuristic = per-island init + generation step + eval accounting."""
+
+    name: str
+    init: Callable[[Array], State]          # key -> single-island state
+    gen: Callable[[State, Array], State]    # (state, key) -> state
+    evals_per_gen: int
+    init_evals: int
+
+
+AlgoMaker = Callable[..., MetaHeuristic]
+
+
+class IslandOptimizer:
+    """popt4jlib OptimizerIntf over the island engine."""
+
+    def __init__(
+        self,
+        algo_maker: AlgoMaker,
+        cfg: IslandConfig,
+        params: dict[str, Any] | None = None,
+        mesh: Mesh | None = None,
+        exec_cfg: ExecutorConfig = ExecutorConfig(),
+        round_callback: Callable[[int, Array, Array], None] | None = None,
+    ) -> None:
+        self.algo_maker = algo_maker
+        self.cfg = cfg
+        self.params = dict(params or {})
+        self.mesh = mesh
+        self.exec_cfg = exec_cfg
+        self.round_callback = round_callback
+
+    # -- engine ------------------------------------------------------------
+
+    def _build(self, f: Function) -> MetaHeuristic:
+        cfg = self.cfg
+        pop_axis_shard = (
+            self.mesh is not None and cfg.n_islands == 1 and cfg.pop_axes is not None
+        )
+        exec_cfg = dataclasses.replace(
+            self.exec_cfg, mesh_axis=cfg.pop_axes if pop_axis_shard else None
+        )
+        evaluator = make_batch_evaluator(f, exec_cfg, self.mesh if pop_axis_shard else None)
+        return self.algo_maker(
+            f=f, evaluator=evaluator, pop=cfg.pop, dim=cfg.dim, **self.params
+        )
+
+    def _round_fn(self, algo: MetaHeuristic) -> Callable[[State, Array], State]:
+        cfg = self.cfg
+        stacked = cfg.n_islands > 1
+
+        def round_fn(state: State, key: Array) -> State:
+            def one_gen(carry: State, k: Array) -> tuple[State, None]:
+                if stacked:
+                    ks = jax.random.split(k, cfg.n_islands)
+                    return jax.vmap(algo.gen)(carry, ks), None
+                return algo.gen(carry, k), None
+
+            gen_keys = jax.random.split(key, cfg.sync_every)
+            state, _ = jax.lax.scan(one_gen, state, gen_keys)
+
+            if stacked and cfg.migration != "none":
+                pop, fit = mig.migrate(
+                    cfg.migration, state["pop"], state["fit"],
+                    k=cfg.n_migrants, alive=state.get("alive"),
+                )
+                state = {**state, "pop": pop, "fit": fit}
+
+            if stacked and cfg.share_incumbent:
+                gi = jnp.argmin(state["best_val"])
+                gval = state["best_val"][gi]
+                garg = state["best_arg"][gi]
+                state = {
+                    **state,
+                    "best_val": jnp.full_like(state["best_val"], gval),
+                    "best_arg": jnp.broadcast_to(garg, state["best_arg"].shape),
+                }
+            return state
+
+        return round_fn
+
+    def _shard_state(self, state: State) -> State:
+        if self.mesh is None or self.cfg.n_islands <= 1:
+            return state
+        axes = self.cfg.island_axes
+
+        def put(x: Array) -> Array:
+            spec = P(axes, *([None] * (x.ndim - 1)))
+            return jax.device_put(x, NamedSharding(self.mesh, spec))
+
+        return jax.tree.map(put, state)
+
+    def minimize(self, f: Function, key: Array) -> OptimizeResult:
+        cfg = self.cfg
+        algo = self._build(f)
+        per_round = algo.evals_per_gen * cfg.n_islands * cfg.sync_every
+        budget = cfg.max_evals - algo.init_evals * cfg.n_islands
+        n_rounds = max(1, budget // max(per_round, 1))
+
+        key, ik = jax.random.split(key)
+        if cfg.n_islands > 1:
+            init_keys = jax.random.split(ik, cfg.n_islands)
+            state = jax.vmap(algo.init)(init_keys)
+        else:
+            state = algo.init(ik)
+        state = self._shard_state(state)
+
+        ctx = self.mesh if self.mesh is not None else _nullcontext()
+        round_jit = jax.jit(self._round_fn(algo), donate_argnums=0)
+        history = []
+        with ctx:
+            for r in range(n_rounds):
+                key, rk = jax.random.split(key)
+                state = round_jit(state, rk)
+                bv = state["best_val"]
+                gval = jnp.min(bv) if cfg.n_islands > 1 else bv
+                history.append(float(gval))
+                if self.round_callback is not None:
+                    self.round_callback(r, state["best_arg"], state["best_val"])
+
+        bv = state["best_val"]
+        if cfg.n_islands > 1:
+            gi = int(jnp.argmin(bv))
+            arg, val = state["best_arg"][gi], float(bv[gi])
+        else:
+            arg, val = state["best_arg"], float(bv)
+        n_evals = algo.init_evals * cfg.n_islands + n_rounds * per_round
+        return OptimizeResult(
+            arg=arg, value=val, n_evals=n_evals,
+            n_gens=n_rounds * cfg.sync_every, history=history,
+        )
+
+
+class _nullcontext:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False
+
+
+def uniform_init(key: Array, pop: int, dim: int, lo: float, hi: float) -> Array:
+    return jax.random.uniform(key, (pop, dim), minval=lo, maxval=hi, dtype=jnp.float32)
+
+
+def clip_box(x: Array, lo: float, hi: float) -> Array:
+    return jnp.clip(x, lo, hi)
+
+
+def track_best(state: State, pop: Array, fit: Array) -> State:
+    """Update the per-island incumbent from the current population."""
+    i = jnp.argmin(fit)
+    better = fit[i] < state["best_val"]
+    return {
+        **state,
+        "pop": pop,
+        "fit": fit,
+        "best_val": jnp.where(better, fit[i], state["best_val"]),
+        "best_arg": jnp.where(better, pop[i], state["best_arg"]),
+    }

@@ -1,0 +1,97 @@
+"""Island migration policies — popt4jlib's DGA/DPSO/DDE migration models.
+
+Operates on island-stacked arrays ``pop: (I, P, D)``, ``fit: (I, P)``. When the
+island axis is sharded over devices, the rolls/gathers below lower to
+collective-permute / all-gather on the pod — the TPU-native version of the
+Java library's socket-borne migrant exchange.
+
+Policies:
+  ring        counter-clock-wise unidirectional ring (the DPSO/DDE default):
+              island i sends its best ``k`` individuals to island i+1 (mod I),
+              which adopts any migrant better than its current worst.
+  starvation  the DGA/DGABH model: an island whose live population is 0, or less
+              than (max island population / 2.5), becomes the immigration host;
+              every other island sends its best individual there. At most
+              ``k``<=2 migrants leave an island per sync round (paper limit).
+  none        isolated islands.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+STARVATION_RATIO = 2.5  # the paper's "population of another island divided by 2.5"
+
+
+def _replace_worst(pop: Array, fit: Array, mig: Array, migf: Array):
+    """Per-island: replace the worst-k individuals with migrants when the migrant
+    is better. pop (P,D), fit (P,), mig (k,D), migf (k,)."""
+    k = mig.shape[0]
+    worst = jnp.argsort(fit)[-k:]                      # indices of worst-k
+    cur = fit[worst]
+    take = migf < cur
+    newf = jnp.where(take, migf, cur)
+    newp = jnp.where(take[:, None], mig, pop[worst])
+    return pop.at[worst].set(newp), fit.at[worst].set(newf)
+
+
+def ring(pop: Array, fit: Array, k: int = 2):
+    """Counter-clock-wise ring migration of the best-k per island."""
+    if pop.shape[0] <= 1:
+        return pop, fit
+    best = jnp.argsort(fit, axis=1)[:, :k]                         # (I,k)
+    mig = jnp.take_along_axis(pop, best[..., None], axis=1)        # (I,k,D)
+    migf = jnp.take_along_axis(fit, best, axis=1)                  # (I,k)
+    # i -> i+1: destination i receives from i-1  (ppermute on a sharded axis)
+    mig = jnp.roll(mig, 1, axis=0)
+    migf = jnp.roll(migf, 1, axis=0)
+    return jax.vmap(_replace_worst)(pop, fit, mig, migf)
+
+
+def starvation(pop: Array, fit: Array, k: int = 2, alive: Array | None = None):
+    """DGA starvation-based immigration: weakest island hosts everyone's best.
+
+    ``alive`` (I, P) marks live individuals (aging model); dead slots carry +inf
+    fitness. Migrants land in the host island's worst/dead slots.
+    """
+    if pop.shape[0] <= 1:
+        return pop, fit
+    if alive is None:
+        alive = jnp.isfinite(fit)
+    counts = alive.sum(axis=1)                                     # (I,)
+    host = jnp.argmin(counts)
+    starving = (counts[host] == 0) | (counts[host].astype(jnp.float32)
+                                      < counts.max().astype(jnp.float32) / STARVATION_RATIO)
+
+    k = min(k, 2)  # paper: at most 2 migrants leave an island per generation
+    best = jnp.argsort(fit, axis=1)[:, :k]                         # (I,k)
+    mig = jnp.take_along_axis(pop, best[..., None], axis=1)        # (I,k,D)
+    migf = jnp.take_along_axis(fit, best, axis=1)                  # (I,k)
+    # Donors: every island except the host. Mask the host's own contribution.
+    donor_mask = (jnp.arange(pop.shape[0]) != host)[:, None]       # (I,1)
+    migf = jnp.where(donor_mask, migf, jnp.inf)
+    flat_m = mig.reshape(-1, pop.shape[-1])                        # (I*k, D)
+    flat_f = migf.reshape(-1)                                      # (I*k,)
+
+    # Host adopts the best arrivals into its worst slots.
+    hpop, hfit = pop[host], fit[host]
+    order = jnp.argsort(flat_f)
+    nslots = min(flat_f.shape[0], hfit.shape[0])
+    arrivals = flat_m[order][:nslots]
+    arrivalf = flat_f[order][:nslots]
+    hpop2, hfit2 = _replace_worst(hpop, hfit, arrivals, arrivalf)
+    hpop2 = jnp.where(starving, hpop2, hpop)
+    hfit2 = jnp.where(starving, hfit2, hfit)
+    return pop.at[host].set(hpop2), fit.at[host].set(hfit2)
+
+
+def migrate(policy: str, pop: Array, fit: Array, k: int = 2, alive: Array | None = None):
+    if policy == "ring":
+        return ring(pop, fit, k)
+    if policy == "starvation":
+        return starvation(pop, fit, k, alive)
+    if policy == "none":
+        return pop, fit
+    raise ValueError(f"unknown migration policy {policy!r}")

@@ -1,0 +1,68 @@
+"""DPSO — island-model Particle Swarm Optimization (popt4jlib.PS).
+
+Velocity/position update with inertia w and cognitive/social factors f_p/f_g
+(Fig.4 setup: w=0.6, f_p=f_g=1). The island's gbest is the SelectorIntf
+"topology" (default: global-within-island); inter-island exchange uses the
+engine's counter-clock-wise ring — the paper's DPSO default.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.islands import MetaHeuristic, State, clip_box, uniform_init
+from repro.functions.benchmarks import Function
+
+Array = jax.Array
+
+
+def make(
+    f: Function,
+    evaluator: Callable[[Array], Array],
+    pop: int,
+    dim: int,
+    w: float = 0.6,
+    fp: float = 1.0,
+    fg: float = 1.0,
+    vmax_frac: float = 0.2,
+) -> MetaHeuristic:
+    lo, hi = f.lo, f.hi
+    vmax = vmax_frac * (hi - lo)
+
+    def init(key: Array) -> State:
+        kx, kv = jax.random.split(key)
+        x = uniform_init(kx, pop, dim, lo, hi)
+        v = vmax * (jax.random.uniform(kv, (pop, dim)) - 0.5)
+        fit = evaluator(x)
+        i = jnp.argmin(fit)
+        return {
+            "pop": x, "fit": fit, "vel": v,
+            # distinct buffers: the engine donates the state at round boundaries
+            "pbest": jnp.copy(x), "pbest_f": jnp.copy(fit),
+            "best_arg": x[i], "best_val": fit[i],
+        }
+
+    def gen(state: State, key: Array) -> State:
+        x, v = state["pop"], state["vel"]
+        k1, k2 = jax.random.split(key)
+        r1 = jax.random.uniform(k1, x.shape)
+        r2 = jax.random.uniform(k2, x.shape)
+        v = w * v + fp * r1 * (state["pbest"] - x) + fg * r2 * (state["best_arg"] - x)
+        v = jnp.clip(v, -vmax, vmax)
+        x = clip_box(x + v, lo, hi)
+        fit = evaluator(x)
+
+        imp = fit < state["pbest_f"]
+        pbest = jnp.where(imp[:, None], x, state["pbest"])
+        pbest_f = jnp.where(imp, fit, state["pbest_f"])
+        i = jnp.argmin(pbest_f)
+        better = pbest_f[i] < state["best_val"]
+        return {
+            "pop": x, "fit": fit, "vel": v, "pbest": pbest, "pbest_f": pbest_f,
+            "best_val": jnp.where(better, pbest_f[i], state["best_val"]),
+            "best_arg": jnp.where(better, pbest[i], state["best_arg"]),
+        }
+
+    return MetaHeuristic("pso", init, gen, evals_per_gen=pop, init_evals=pop)

@@ -1,0 +1,71 @@
+"""DSA — multi-threaded Simulated Annealing with multi-point restarts
+(popt4jlib.SA, after Ram–Sreenivas–Subramaniam [8]).
+
+The Java class runs one chain per thread; here the chains are the rows of a
+(P, D) array (vmapped; sharded by the engine). All four cooling schedules of
+popt4jlib.SA.SAScheduleIntf are provided: linear, exponential, Boltzmann, Cauchy.
+Fig.4 setup: linear schedule from T0=1000 down to 0 over the run.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.islands import MetaHeuristic, State, clip_box, uniform_init
+from repro.functions.benchmarks import Function
+
+Array = jax.Array
+
+SCHEDULES = {
+    "linear": lambda t, T0, n: T0 * jnp.maximum(1.0 - t / n, 0.0),
+    "exponential": lambda t, T0, n: T0 * (0.99 ** t),
+    "boltzmann": lambda t, T0, n: T0 / jnp.log(t + jnp.e),
+    "cauchy": lambda t, T0, n: T0 / (1.0 + t),
+}
+
+
+def make(
+    f: Function,
+    evaluator: Callable[[Array], Array],
+    pop: int,
+    dim: int,
+    schedule: str = "linear",
+    T0: float = 1000.0,
+    n_gens_hint: int = 10_000,   # horizon for the linear schedule
+    step_frac: float = 0.1,      # proposal sigma as a fraction of the box width
+) -> MetaHeuristic:
+    lo, hi = f.lo, f.hi
+    sched = SCHEDULES[schedule]
+    sigma = step_frac * (hi - lo)
+
+    def init(key: Array) -> State:
+        x = uniform_init(key, pop, dim, lo, hi)
+        fit = evaluator(x)
+        i = jnp.argmin(fit)
+        return {
+            "pop": x, "fit": fit, "t": jnp.zeros((), jnp.float32),
+            "best_arg": x[i], "best_val": fit[i],
+        }
+
+    def gen(state: State, key: Array) -> State:
+        x, fx, t = state["pop"], state["fit"], state["t"]
+        kp, ka = jax.random.split(key)
+        T = sched(t, T0, float(n_gens_hint))
+        y = clip_box(x + sigma * jax.random.normal(kp, x.shape), lo, hi)
+        fy = evaluator(y)
+        dF = fy - fx
+        u = jax.random.uniform(ka, fx.shape)
+        accept = (dF <= 0) | (u < jnp.exp(-dF / jnp.maximum(T, 1e-12)))
+        x = jnp.where(accept[:, None], y, x)
+        fx = jnp.where(accept, fy, fx)
+        i = jnp.argmin(fx)
+        better = fx[i] < state["best_val"]
+        return {
+            "pop": x, "fit": fx, "t": t + 1.0,
+            "best_val": jnp.where(better, fx[i], state["best_val"]),
+            "best_arg": jnp.where(better, x[i], state["best_arg"]),
+        }
+
+    return MetaHeuristic("sa", init, gen, evals_per_gen=pop, init_evals=pop)

@@ -1,0 +1,7 @@
+from repro.functions.benchmarks import (  # noqa: F401
+    FUNCTIONS,
+    Function,
+    get,
+    make_shifted_rosenbrock,
+    shift_vector,
+)

@@ -1,0 +1,221 @@
+"""Benchmark test functions from popt4jlib §V.B (a)–(k).
+
+All functions are pure-jnp, operate on a single (dim,) vector and are written to be
+`vmap`-able over a population axis and differentiable where the underlying function
+is (LND1–LND7 are nonsmooth by construction — subgradients via JAX where defined).
+
+Definitions follow the classical (unshifted, unrotated) forms the paper uses, plus
+the CEC'2008 shifted Rosenbrock used in §V.A. LND1–LND7 follow Haarala's
+large-scale nonsmooth testbed [14]: MAXQ, MXHILB, Chained LQ, Chained CB3 I/II,
+Number of Active Faces, Nonsmooth Generalized Brown 2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Function:
+    """popt4jlib ``FunctionIntf`` equivalent: a real-valued objective.
+
+    ``fn`` maps a (dim,) vector -> scalar. ``lo``/``hi`` give the box domain used
+    by the optimizers for initialization and clipping (the paper's methods are
+    box-constrained searches).
+    """
+
+    name: str
+    fn: Callable[[Array], Array]
+    lo: float
+    hi: float
+    f_star: float = 0.0  # known global optimum value (for reporting only)
+    smooth: bool = True
+
+    def __call__(self, x: Array) -> Array:
+        return self.fn(x)
+
+    def eval_population(self, pop: Array) -> Array:
+        """Evaluate a (P, dim) population -> (P,) fitness. The paper's distributed
+        batch evaluation maps onto vmap (+ sharding at the engine level)."""
+        return jax.vmap(self.fn)(pop)
+
+
+# ---------------------------------------------------------------------------
+# (a)–(j): smooth/classic benchmark functions
+# ---------------------------------------------------------------------------
+
+def ackley(x: Array) -> Array:
+    d = x.shape[-1]
+    s1 = jnp.sqrt(jnp.mean(x * x, axis=-1))
+    s2 = jnp.mean(jnp.cos(2.0 * jnp.pi * x), axis=-1)
+    return (-20.0 * jnp.exp(-0.2 * s1) - jnp.exp(s2) + 20.0 + jnp.e).astype(x.dtype)
+
+
+def rastrigin(x: Array) -> Array:
+    d = x.shape[-1]
+    return 10.0 * d + jnp.sum(x * x - 10.0 * jnp.cos(2.0 * jnp.pi * x), axis=-1)
+
+
+def rosenbrock(x: Array) -> Array:
+    x0, x1 = x[..., :-1], x[..., 1:]
+    return jnp.sum(100.0 * (x1 - x0 * x0) ** 2 + (1.0 - x0) ** 2, axis=-1)
+
+
+def dropwave(x: Array) -> Array:
+    # n-D generalization of the classic 2-D DropWave.
+    s = jnp.sum(x * x, axis=-1)
+    return -(1.0 + jnp.cos(12.0 * jnp.sqrt(s))) / (0.5 * s + 2.0)
+
+
+def schwefel(x: Array) -> Array:
+    d = x.shape[-1]
+    return 418.9829 * d - jnp.sum(x * jnp.sin(jnp.sqrt(jnp.abs(x))), axis=-1)
+
+
+def griewank(x: Array) -> Array:
+    d = x.shape[-1]
+    i = jnp.arange(1, d + 1, dtype=x.dtype)
+    return jnp.sum(x * x, axis=-1) / 4000.0 - jnp.prod(jnp.cos(x / jnp.sqrt(i)), axis=-1) + 1.0
+
+
+def trid(x: Array) -> Array:
+    return jnp.sum((x - 1.0) ** 2, axis=-1) - jnp.sum(x[..., 1:] * x[..., :-1], axis=-1)
+
+
+def michalewicz(x: Array, m: int = 10) -> Array:
+    d = x.shape[-1]
+    i = jnp.arange(1, d + 1, dtype=x.dtype)
+    return -jnp.sum(jnp.sin(x) * jnp.sin(i * x * x / jnp.pi) ** (2 * m), axis=-1)
+
+
+def sphere(x: Array) -> Array:
+    return jnp.sum(x * x, axis=-1)
+
+
+def weierstrass(x: Array, a: float = 0.5, b: float = 3.0, kmax: int = 20) -> Array:
+    d = x.shape[-1]
+    k = jnp.arange(kmax + 1, dtype=x.dtype)
+    ak = a ** k                      # (K,)
+    bk = b ** k                      # (K,)
+    inner = jnp.sum(ak * jnp.cos(2.0 * jnp.pi * bk * (x[..., None] + 0.5)), axis=-1)
+    const = jnp.sum(ak * jnp.cos(jnp.pi * bk))  # 2*pi*b^k*0.5
+    return jnp.sum(inner, axis=-1) - d * const
+
+
+# ---------------------------------------------------------------------------
+# (k): LND1–LND7 — Haarala's large-scale nonsmooth problems [14]
+# ---------------------------------------------------------------------------
+
+def lnd1_maxq(x: Array) -> Array:
+    """MAXQ: max_i x_i^2."""
+    return jnp.max(x * x, axis=-1)
+
+
+def lnd2_mxhilb(x: Array) -> Array:
+    """MXHILB: max_i |sum_j x_j / (i+j-1)|."""
+    d = x.shape[-1]
+    i = jnp.arange(1, d + 1)[:, None]
+    j = jnp.arange(1, d + 1)[None, :]
+    H = 1.0 / (i + j - 1.0)
+    return jnp.max(jnp.abs(H.astype(x.dtype) @ x), axis=-1)
+
+
+def lnd3_chained_lq(x: Array) -> Array:
+    """Chained LQ: sum_i max{-x_i - x_{i+1}, -x_i - x_{i+1} + x_i^2 + x_{i+1}^2 - 1}."""
+    a, b = x[..., :-1], x[..., 1:]
+    t = -a - b
+    return jnp.sum(jnp.maximum(t, t + a * a + b * b - 1.0), axis=-1)
+
+
+def lnd4_chained_cb3_i(x: Array) -> Array:
+    """Chained CB3 I: sum_i max of the three convex pieces."""
+    a, b = x[..., :-1], x[..., 1:]
+    p1 = a ** 4 + b * b
+    p2 = (2.0 - a) ** 2 + (2.0 - b) ** 2
+    p3 = 2.0 * jnp.exp(-a + b)
+    return jnp.sum(jnp.maximum(jnp.maximum(p1, p2), p3), axis=-1)
+
+
+def lnd5_chained_cb3_ii(x: Array) -> Array:
+    """Chained CB3 II: max of the three summed pieces."""
+    a, b = x[..., :-1], x[..., 1:]
+    s1 = jnp.sum(a ** 4 + b * b, axis=-1)
+    s2 = jnp.sum((2.0 - a) ** 2 + (2.0 - b) ** 2, axis=-1)
+    s3 = jnp.sum(2.0 * jnp.exp(-a + b), axis=-1)
+    return jnp.maximum(jnp.maximum(s1, s2), s3)
+
+
+def lnd6_active_faces(x: Array) -> Array:
+    """Number of Active Faces: max_i { g(-sum x), g(x_i) }, g(y)=ln(|y|+1)."""
+    g = lambda y: jnp.log(jnp.abs(y) + 1.0)
+    return jnp.maximum(jnp.max(g(x), axis=-1), g(-jnp.sum(x, axis=-1)))
+
+
+def lnd7_brown2(x: Array) -> Array:
+    """Nonsmooth generalized Brown function 2.
+
+    sum_i |x_i|^{x_{i+1}^2+1} + |x_{i+1}|^{x_i^2+1}.  |x|^p computed via
+    exp(p*log(|x|+eps)) for numeric stability at 0.
+    """
+    a, b = x[..., :-1], x[..., 1:]
+    eps = jnp.asarray(1e-12, x.dtype)
+    powa = jnp.exp((b * b + 1.0) * jnp.log(jnp.abs(a) + eps))
+    powb = jnp.exp((a * a + 1.0) * jnp.log(jnp.abs(b) + eps))
+    return jnp.sum(powa + powb, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# §V.A: CEC'2008 shifted Rosenbrock (F_bias = 390)
+# ---------------------------------------------------------------------------
+
+def shift_vector(dim: int, seed: int = 2008, lo: float = -90.0, hi: float = 90.0) -> Array:
+    """Deterministic stand-in for the CEC'2008 shift data file (offline container)."""
+    key = jax.random.PRNGKey(seed)
+    return jax.random.uniform(key, (dim,), minval=lo, maxval=hi, dtype=jnp.float32)
+
+
+def make_shifted_rosenbrock(dim: int, seed: int = 2008, bias: float = 390.0) -> Function:
+    o = shift_vector(dim, seed)
+
+    def fn(x: Array) -> Array:
+        z = x - o.astype(x.dtype) + 1.0
+        return rosenbrock(z) + jnp.asarray(bias, x.dtype)
+
+    return Function("shifted_rosenbrock", fn, -100.0, 100.0, f_star=bias)
+
+
+# ---------------------------------------------------------------------------
+# Registry — the §V.B testbed (domains follow the classical definitions).
+# ---------------------------------------------------------------------------
+
+FUNCTIONS: dict[str, Function] = {
+    "ackley": Function("ackley", ackley, -32.768, 32.768),
+    "rastrigin": Function("rastrigin", rastrigin, -5.12, 5.12),
+    "rosenbrock": Function("rosenbrock", rosenbrock, -100.0, 100.0),
+    "dropwave": Function("dropwave", dropwave, -5.12, 5.12, f_star=-1.0),
+    "schwefel": Function("schwefel", schwefel, -500.0, 500.0),
+    "griewank": Function("griewank", griewank, -600.0, 600.0),
+    "trid": Function("trid", trid, -100.0, 100.0, f_star=float("-inf")),
+    "michalewicz": Function("michalewicz", michalewicz, 0.0, jnp.pi, f_star=float("-inf")),
+    "sphere": Function("sphere", sphere, -100.0, 100.0),
+    "weierstrass": Function("weierstrass", weierstrass, -0.5, 0.5),
+    "lnd1": Function("lnd1", lnd1_maxq, -10.0, 10.0, smooth=False),
+    "lnd2": Function("lnd2", lnd2_mxhilb, -10.0, 10.0, smooth=False),
+    "lnd3": Function("lnd3", lnd3_chained_lq, -10.0, 10.0, smooth=False),
+    "lnd4": Function("lnd4", lnd4_chained_cb3_i, -10.0, 10.0, smooth=False),
+    "lnd5": Function("lnd5", lnd5_chained_cb3_ii, -10.0, 10.0, smooth=False),
+    "lnd6": Function("lnd6", lnd6_active_faces, -10.0, 10.0, smooth=False),
+    "lnd7": Function("lnd7", lnd7_brown2, -1.0, 1.0, smooth=False),
+}
+
+
+def get(name: str, dim: int | None = None) -> Function:
+    if name == "shifted_rosenbrock":
+        assert dim is not None, "shifted_rosenbrock needs dim for its shift vector"
+        return make_shifted_rosenbrock(dim)
+    return FUNCTIONS[name]

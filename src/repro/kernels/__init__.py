@@ -1,0 +1,2 @@
+from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels.ops import bench_eval, de_step, flash_attention, ssd_scan  # noqa: F401

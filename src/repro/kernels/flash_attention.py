@@ -1,0 +1,116 @@
+"""Flash attention — Pallas TPU kernel.
+
+Streaming-softmax attention tiled for VMEM/MXU: grid (batch*heads, q_blocks,
+kv_blocks); the kv dimension is the minor (sequential) grid axis on TPU, so the
+running max / sum / output accumulator live in VMEM scratch across kv steps and
+are flushed at the last kv block. Supports causal masking, sliding windows
+(gemma2 local layers) and score softcap.
+
+Block sizes default to q=256, kv=512 (MXU-aligned multiples of 128; ~
+(256+512)*head_dim*2B + 256*512*4B ≈ 0.8 MB VMEM live per step at head_dim=128,
+well inside the ~16 MB/core budget with double buffering).
+
+Validated against ref.flash_attention_ref with interpret=True (CPU container);
+TPU is the deployment target.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: int, softcap: float,
+            q_block: int, kv_block: int, kv_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                  # (qb, hd)
+    k = k_ref[0].astype(jnp.float32)                  # (kvb, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = qi * q_block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = ki * kv_block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    ok = k_pos < kv_len                               # kv padding
+    if causal:
+        ok &= q_pos >= k_pos
+    if window > 0:
+        ok &= (q_pos - k_pos) < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = (acc_ref[...] * corr[:, None]
+                    + jax.lax.dot(p.astype(v.dtype), v,
+                                  preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0, softcap: float = 0.0,
+                    q_block: int = 256, kv_block: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q: (BH, S, hd); k, v: (BH, T, hd) — KV heads pre-expanded. Returns (BH, S, hd).
+
+    S and T are padded to the block sizes internally; pad keys are masked."""
+    BH, S, hd = q.shape
+    T = k.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+    q_block = min(q_block, max(128, S))
+    kv_block = min(kv_block, max(128, T))
+    Sp = (S + q_block - 1) // q_block * q_block
+    Tp = (T + kv_block - 1) // kv_block * kv_block
+    if Sp != S:
+        q = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0)))
+    if Tp != T:
+        k = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0)))
+
+    grid = (BH, Sp // q_block, Tp // kv_block)
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, softcap=softcap,
+        q_block=q_block, kv_block=kv_block, kv_len=T)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_block, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, kv_block, hd), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, kv_block, hd), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, hd), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block, hd), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :S]

@@ -1,0 +1,59 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``use_pallas`` selects the kernel; on this CPU container the kernels run in
+interpret mode (the TPU Mosaic compiler is unavailable), so the wrappers
+default to interpret=True off-TPU and compiled Pallas on TPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels import bench_eval as _be
+from repro.kernels import de_step as _de
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd_scan as _ssd
+from repro.kernels import ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap", "use_pallas"))
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    use_pallas=True):
+    if not use_pallas:
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                       softcap=softcap)
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, interpret=not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("chunk", "use_pallas"))
+def ssd_scan(xh, dt, A, Bm, Cm, chunk=128, use_pallas=True):
+    if not use_pallas:
+        return ref.ssd_ref(xh, dt, A, Bm, Cm)
+    return _ssd.ssd_scan(xh, dt, A, Bm, Cm, chunk=chunk,
+                         interpret=not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("fn", "bias", "use_pallas"))
+def bench_eval(pop, fn, shift=None, bias=0.0, use_pallas=True):
+    if not use_pallas:
+        return ref.bench_eval_ref(pop, fn, shift, bias)
+    return _be.bench_eval(pop, fn, shift=shift, bias=bias,
+                          interpret=not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("fn", "bias", "w", "px", "lo", "hi",
+                                   "use_pallas"))
+def de_step(pop, fit, idx_abc, u, jrand, fn="sphere", shift=None, bias=0.0,
+            w=0.5, px=0.2, lo=-100.0, hi=100.0, use_pallas=True):
+    if not use_pallas:
+        return ref.de_step_ref(pop, fit, idx_abc, u, jrand, fn, shift, bias,
+                               w, px, lo, hi)
+    return _de.de_step(pop, fit, idx_abc, u, jrand, fn=fn, shift=shift,
+                       bias=bias, w=w, px=px, lo=lo, hi=hi,
+                       interpret=not _on_tpu())

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """q: (BH, S, hd); k, v: (BH, T, hd)."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bsh,bth->bst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = jnp.arange(q.shape[1])[:, None]
+    kp = jnp.arange(k.shape[1])[None, :]
+    ok = jnp.ones_like(s, bool)
+    if causal:
+        ok &= (qp >= kp)[None]
+    if window > 0:
+        ok &= ((qp - kp) < window)[None]
+    s = jnp.where(ok, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bst,bth->bsh", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_ref(xh, dt, A, Bm, Cm):
+    """Sequential SSD recurrence. xh: (BH, S, P); dt: (BH, S); A: (BH,);
+    Bm, Cm: (BH, S, N). Returns (BH, S, P)."""
+    def one(x, d, a, B, C):
+        def step(state, inp):
+            xt, dt_t, bt, ct = inp
+            dA = jnp.exp(dt_t * a)
+            state = state * dA + jnp.outer(bt, xt * dt_t)
+            return state, ct @ state
+        S, P = x.shape
+        N = B.shape[-1]
+        state0 = jnp.zeros((N, P), jnp.float32)
+        _, ys = jax.lax.scan(step, state0,
+                             (x.astype(jnp.float32), d.astype(jnp.float32),
+                              B.astype(jnp.float32), C.astype(jnp.float32)))
+        return ys
+
+    return jax.vmap(one)(xh, dt, A, Bm, Cm).astype(xh.dtype)
+
+
+def bench_eval_ref(pop, fn, shift=None, bias=0.0):
+    from repro.functions import benchmarks as bm
+    x = pop.astype(jnp.float32)
+    if shift is not None:
+        x = x - shift
+    if fn == "shifted_rosenbrock":
+        return bm.rosenbrock(x + 1.0) + bias
+    return getattr(bm, fn)(x) + bias
+
+
+def de_step_ref(pop, fit, idx_abc, u, jrand, fn="sphere", shift=None,
+                bias=0.0, w=0.5, px=0.2, lo=-100.0, hi=100.0):
+    P, D = pop.shape
+    pa, pb, pc = pop[idx_abc[0]], pop[idx_abc[1]], pop[idx_abc[2]]
+    mutant = jnp.clip(pa + w * (pb - pc), lo, hi)
+    cross = (u < px) | (jnp.arange(D)[None, :] == jrand[:, None])
+    trial = jnp.where(cross, mutant, pop)
+    tfit = bench_eval_ref(trial, fn, shift, bias)
+    better = tfit <= fit
+    return (jnp.where(better[:, None], trial, pop),
+            jnp.where(better, tfit, fit))

@@ -1,0 +1,86 @@
+"""Mamba2 SSD chunked scan — Pallas TPU kernel.
+
+Grid: (batch*heads, n_chunks); the chunk axis is the minor (sequential) grid
+dimension, so the inter-chunk recurrent state (N, P) lives in VMEM scratch and
+flows across chunk steps — the TPU-native replacement for the CUDA
+implementation's fused warp-level scan. Within a chunk everything is (Q, N) /
+(Q, Q) / (Q, P) matmuls on the MXU plus a cumulative-sum decay.
+
+VMEM per step at Q=128, N=128, P=64: x(QP) + B,C(QN) + L(QQ) + state(NP)
+~ 0.25 MB f32 — tiny; double buffering and bigger Q are free wins on TPU.
+
+Validated against ref.ssd_ref with interpret=True.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, state_ref, *, Q: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)      # (Q, 1)
+    A = a_ref[0].astype(jnp.float32)        # (1,) scalar decay rate (per head)
+    B = b_ref[0].astype(jnp.float32)        # (Q, N)
+    C = c_ref[0].astype(jnp.float32)        # (Q, N)
+
+    dA = dt[:, 0] * A[0]                    # (Q,) negative
+    seg = jnp.cumsum(dA)                    # within-chunk cumulative log-decay
+    total = seg[-1]
+
+    # intra-chunk: (C B^T * L) @ (x dt)
+    li = seg[:, None] - seg[None, :]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(mask, jnp.exp(li), 0.0)
+    xdt = x * dt                             # (Q, P)
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    y = jax.lax.dot(cb * L, xdt, preferred_element_type=jnp.float32)
+
+    # inter-chunk: y += C exp(seg) @ state ; state' = e^total state + B^T(decay x)
+    y += jax.lax.dot(C * jnp.exp(seg)[:, None], state_ref[...],
+                     preferred_element_type=jnp.float32)
+    decay_to_end = jnp.exp(total - seg)[:, None]           # (Q, 1)
+    state_ref[...] = (state_ref[...] * jnp.exp(total)
+                      + jax.lax.dot_general(B, xdt * decay_to_end,
+                                            (((0,), (0,)), ((), ())),
+                                            preferred_element_type=jnp.float32))
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+def ssd_scan(xh: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+             Cm: jax.Array, chunk: int = 128, *,
+             interpret: bool = False) -> jax.Array:
+    """xh: (BH, S, P); dt: (BH, S); A: (BH,); Bm, Cm: (BH, S, N).
+    S must be a multiple of ``chunk``. Returns y: (BH, S, P)."""
+    BH, S, P = xh.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, "pad sequence to the chunk size"
+    nC = S // chunk
+    kernel = functools.partial(_kernel, Q=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nC),
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1), lambda b, c: (b, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, P), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, P), xh.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(xh, dt[..., None], A[:, None], Bm, Cm)

@@ -1,0 +1,237 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+# --- everything below may import jax -------------------------------------
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCHS, get_config             # noqa: E402
+from repro.configs.shapes import SHAPES, cell_supported, input_specs  # noqa: E402
+from repro.launch.mesh import make_production_mesh      # noqa: E402
+from repro.launch.steps import (                        # noqa: E402
+    make_decode_step, make_prefill_step, make_train_step)
+from repro.models.transformer import init_params        # noqa: E402
+from repro.optim import adam                            # noqa: E402
+from repro.parallel import roofline as rl               # noqa: E402
+from repro.parallel.memmodel import analytic_memory     # noqa: E402
+from repro.parallel.sharding import (                   # noqa: E402
+    batch_specs, compute_specs, decode_state_specs, opt_state_specs,
+    param_specs, to_shardings)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves:
+  * the sharding config is coherent (no partitioner errors),
+  * the program fits per-device HBM (memory_analysis),
+  * and yields the roofline terms (cost_analysis + collective parse).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                      # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --multi-pod ...
+"""
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _parse_overrides(sets: list[str] | None) -> dict:
+    out = {}
+    for kv in sets or []:
+        k, v = kv.split("=", 1)
+        try:
+            out[k] = int(v)
+        except ValueError:
+            try:
+                out[k] = float(v)
+            except ValueError:
+                out[k] = {"true": True, "false": False}.get(v.lower(), v)
+    return out
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool,
+               save_hlo: str | None = None,
+               overrides: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    sp = SHAPES[shape]
+    cfg = dataclasses.replace(cfg, seq_len=sp.seq_len,
+                              global_batch=sp.global_batch,
+                              **(overrides or {}))
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = mesh.axis_names
+    kind, specs = input_specs(cfg, shape)
+
+    params_shape = jax.eval_shape(lambda k: init_params(k, cfg),
+                                  SDS((2,), jnp.uint32))
+    c_spec = compute_specs(cfg, axes)        # None for pure-tp archs
+    c_sh = to_shardings(mesh, c_spec) if c_spec is not None else None
+    p_sh = to_shardings(mesh, param_specs(cfg, axes))
+    b_spec, bax = batch_specs(cfg, axes, sp.global_batch)
+    b_sh = to_shardings(mesh, b_spec)
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+    from repro.parallel import ctx as _ctx
+
+    moe_rules = {}
+    dax = ("pod", "data") if multi_pod else "data"
+    if cfg.num_experts and cfg.sharding_mode != "dp+zero1":
+        ep = "model" if cfg.num_experts % 16 == 0 else None
+        f_ax = None if ep else "model"
+        moe_rules = {
+            "moe_eb": NamedSharding(mesh, P(dax, ep, None, None)),
+            "moe_hidden": NamedSharding(mesh, P(dax, ep, None, f_ax)),
+        }
+    if (cfg.n_heads % 16 and cfg.sharding_mode != "dp+zero1"
+            and kind != "decode"):
+        # heads don't divide the model axis: sequence-parallel attention
+        bx = dax if sp.global_batch % (32 if multi_pod else 16) == 0 else None
+        moe_rules["attn_seq_q"] = NamedSharding(mesh, P(bx, "model", None, None))
+        moe_rules["attn_seq_kv"] = NamedSharding(mesh, P(bx, "model", None, None))
+
+    def _lower(jitted, *a):
+        with _ctx.sharding_rules(**moe_rules):
+            return jitted.lower(*a)
+
+    t0 = time.time()
+    if kind == "train":
+        opt_shape = jax.eval_shape(adam.init, params_shape)
+        o_sh = to_shardings(mesh, opt_state_specs(cfg, axes))
+        lbl_sh = to_shardings(mesh, {"labels": P(bax, None)})
+        batch_sh = {**b_sh, "labels": lbl_sh["labels"]}
+        step = make_train_step(cfg, compute_shardings=c_sh)
+        jitted = jax.jit(step, in_shardings=(p_sh, o_sh, batch_sh),
+                         out_shardings=(p_sh, o_sh, None),
+                         donate_argnums=(0, 1))
+        lowered = _lower(jitted, params_shape, opt_shape, specs["batch"])
+    elif kind == "prefill":
+        # serving holds params in the TP compute layout (no FSDP storage)
+        serve_p_sh = c_sh if c_sh is not None else p_sh
+        step = make_prefill_step(cfg)
+        jitted = jax.jit(step, in_shardings=(serve_p_sh, b_sh))
+        lowered = _lower(jitted, params_shape, specs["batch"])
+    else:  # decode
+        serve_p_sh = c_sh if c_sh is not None else p_sh
+        s_sh = to_shardings(mesh, decode_state_specs(cfg, axes, sp.global_batch))
+        # decode batches differ from train batches (single token / frame)
+        db_sh = to_shardings(mesh, jax.tree.map(
+            lambda x: P(bax, *([None] * (x.ndim - 1))), specs["batch"]))
+        step = make_decode_step(cfg)
+        jitted = jax.jit(step, in_shardings=(serve_p_sh, s_sh, db_sh),
+                         out_shardings=(None, s_sh), donate_argnums=(1,))
+        lowered = _lower(jitted, params_shape, specs["state"], specs["batch"])
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    hlo = compiled.as_text()
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+    roof = rl.analyze(compiled, hlo)
+    mem = compiled.memory_analysis()
+    n_chips = 512 if multi_pod else 256
+    analytic = analytic_memory(
+        cfg, kind, axes, sp.global_batch, sp.seq_len, params_shape,
+        param_specs(cfg, axes), c_spec,
+        state_shape=specs.get("state"),
+        state_specs=(decode_state_specs(cfg, axes, sp.global_batch)
+                     if kind == "decode" else None))
+    return {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": kind, "status": "ok",
+        "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
+        "per_device": roof.to_dict(),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            # CPU-backend measurement: an UPPER BOUND — XLA:CPU legalizes all
+            # bf16 arithmetic to f32 (no native bf16), duplicating bf16
+            # buffers at f32 width. See EXPERIMENTS.md §Dry-run.
+            "peak_bytes_cpu_backend": roof.peak_bytes,
+            "analytic_tpu_bytes": analytic,
+            "fits_16GB_analytic": bool(analytic["total"] < 16e9),
+        },
+        "n_chips": n_chips,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--set", action="append", default=None, metavar="K=V",
+                    help="config overrides for hillclimbing, e.g. "
+                         "--set sharding_mode=dp+zero1 --set ssm_chunk=128")
+    ap.add_argument("--tag", default="", help="suffix for the output json")
+    args = ap.parse_args()
+    overrides = _parse_overrides(getattr(args, "set"))
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in shapes:
+            ok, why = cell_supported(cfg, shape)
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}{args.tag}"
+                path = os.path.join(args.out, tag + ".json")
+                if not ok:
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "skip", "reason": why}
+                else:
+                    try:
+                        rec = lower_cell(arch, shape, mp, save_hlo=args.save_hlo,
+                                         overrides=overrides)
+                    except Exception as e:  # a failure here is a bug in the system
+                        rec = {"arch": arch, "shape": shape,
+                               "mesh": "2x16x16" if mp else "16x16",
+                               "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                               "trace": traceback.format_exc()[-2000:]}
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                results.append(rec)
+                line = f"{tag:60s} {rec['status']}"
+                if rec["status"] == "ok":
+                    r = rec["per_device"]
+                    line += (f"  peak={rec['memory']['peak_bytes_cpu_backend']/2**30:6.2f}GiB"
+                             f"  tpu~{rec['memory']['analytic_tpu_bytes']['total']/2**30:6.2f}GiB"
+                             f"  tc={r['t_compute']*1e3:8.3f}ms"
+                             f"  tm={r['t_memory']*1e3:8.3f}ms"
+                             f"  tx={r['t_collective']*1e3:8.3f}ms"
+                             f"  bottleneck={r['bottleneck']}"
+                             f"  (compile {rec['t_compile_s']}s)")
+                elif rec["status"] == "FAIL":
+                    line += "  " + rec["error"][:140]
+                print(line, flush=True)
+
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_fail = sum(r["status"] == "FAIL" for r in results)
+    print(f"\n== dry-run: {n_ok} ok / {n_skip} skip / {n_fail} FAIL ==")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

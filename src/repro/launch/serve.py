@@ -1,0 +1,85 @@
+"""Serving launcher: prefill + batched decode loop with a static KV/SSM cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
+        --prompt-len 16 --decode-steps 32
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.steps import make_decode_step
+from repro.models import init_decode_state, init_params
+from repro.models.transformer import decode_step
+
+
+def serve(cfg, batch: int, prompt_len: int, decode_steps: int,
+          temperature: float = 0.0):
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    max_len = prompt_len + decode_steps + 1
+    state = init_decode_state(cfg, batch, max_len)
+    step = jax.jit(make_decode_step(cfg))
+
+    prompt = jax.random.randint(jax.random.fold_in(key, 1),
+                                (batch, prompt_len), 0, cfg.vocab)
+    # prefill via teacher-forced decode (cache-consistent by construction;
+    # the bulk prefill path is exercised by the prefill_32k dry-run cells)
+    t0 = time.time()
+    logits = None
+    for t in range(prompt_len):
+        logits, state = step(params, state, {"tokens": prompt[:, t:t + 1]})
+    t_prefill = time.time() - t0
+
+    tokens = []
+    t0 = time.time()
+    tok = jnp.argmax(logits[:, :cfg.vocab], axis=-1)[:, None].astype(jnp.int32)
+    for _ in range(decode_steps):
+        tokens.append(tok)
+        logits, state = step(params, state, {"tokens": tok})
+        if temperature > 0:
+            key, sk = jax.random.split(key)
+            tok = jax.random.categorical(
+                sk, logits[:, :cfg.vocab] / temperature, axis=-1
+            )[:, None].astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits[:, :cfg.vocab], axis=-1)[:, None].astype(jnp.int32)
+    jax.block_until_ready(logits)
+    t_decode = time.time() - t0
+    out = jnp.concatenate(tokens, axis=1)
+    return out, t_prefill, t_decode
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--decode-steps", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if cfg.frontend == "audio_stub":
+        raise SystemExit("audio arch serving needs frame embeddings; use the "
+                         "decode dry-run cells for musicgen")
+    out, tp, td = serve(cfg, args.batch, args.prompt_len, args.decode_steps,
+                        args.temperature)
+    print(f"[serve] {cfg.name}: batch={args.batch} prompt={args.prompt_len} "
+          f"decoded={out.shape[1]} tokens")
+    print(f"[serve] prefill {tp*1e3:.0f} ms, decode "
+          f"{td/args.decode_steps*1e3:.1f} ms/token "
+          f"({args.batch*args.decode_steps/td:.0f} tok/s)")
+    print(f"[serve] sample row: {out[0, :16].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

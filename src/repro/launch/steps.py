@@ -1,0 +1,69 @@
+"""Step functions: train / prefill / decode, assembled for jit+shard.
+
+These are the units the dry-run lowers and the launcher runs: pure functions of
+(params, [opt_state | cache], batch) with donation-friendly signatures.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import decode_step, loss_fn, prefill
+from repro.optim import adam
+
+PyTree = Any
+
+
+def _cast_params(params: PyTree, cfg: ModelConfig,
+                 compute_shardings: PyTree | None = None) -> PyTree:
+    """One sharded cast master->compute dtype before the layer loop; with
+    ``compute_shardings`` (tp+fsdp archs) the bf16 copies are additionally
+    constrained to the TP compute layout — the single per-step ZeRO weight
+    all-gather, whose autodiff transpose is the grad reduce-scatter."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    cast = jax.tree.map(
+        lambda p: p.astype(cd) if p.dtype == jnp.float32 and p.ndim >= 2 else p,
+        params)
+    if compute_shardings is None:
+        return cast
+    return jax.tree.map(
+        lambda x, s: jax.lax.with_sharding_constraint(x, s) if s is not None else x,
+        cast, compute_shardings)
+
+
+def make_train_step(cfg: ModelConfig, adam_cfg: adam.AdamConfig | None = None,
+                    compute_shardings: PyTree | None = None):
+    acfg = adam_cfg or adam.AdamConfig()
+
+    def train_step(params: PyTree, opt_state: adam.AdamState, batch: PyTree):
+        def lf(p):
+            return loss_fn(_cast_params(p, cfg, compute_shardings), cfg, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        new_params, new_opt = adam.update(grads, opt_state, params, acfg)
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                          for g in jax.tree.leaves(grads)))
+        return new_params, new_opt, {**metrics, "loss": loss, "grad_norm": gn}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    # serving uses the TP compute layout directly (no FSDP storage to gather)
+    def prefill_step(params: PyTree, batch: PyTree):
+        return prefill(_cast_params(params, cfg), cfg,
+                       tokens=batch.get("tokens"), embeds=batch.get("embeds"))
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def serve_step(params: PyTree, state: PyTree, batch: PyTree):
+        return decode_step(_cast_params(params, cfg), cfg, state,
+                           tokens=batch.get("tokens"),
+                           embeds=batch.get("embeds"))
+
+    return serve_step

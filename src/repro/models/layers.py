@@ -1,0 +1,348 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (direct + chunked
+online-softmax for long context), dense MLP, MoE with scatter dispatch.
+
+All functions are pure; parameters are nested dicts of jnp arrays. Activation
+compute is in ``cfg.compute_dtype`` (bf16 on TPU), reductions in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.parallel import ctx
+
+Array = jax.Array
+Params = dict[str, Any]
+
+NEG_INF = -1e9  # mask bias (bf16-safe)
+
+
+# ---------------------------------------------------------------------------
+# norms / positions
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: Array, scale: Array, eps: float) -> Array:
+    # variance accumulates in f32, but the data path stays in x.dtype. The
+    # f32 bridge sits AFTER square(x): its transpose converts the cotangent
+    # back to bf16 before it touches x — without this, dL/dx is promoted to
+    # f32 through the whole backward pass (2x stash memory, 2x collective
+    # bytes, and ~40 GB of f32 activation params in the grad fusions).
+    var = jnp.mean(jnp.square(x).astype(jnp.float32), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return (x * inv) * (1.0 + scale.astype(x.dtype))
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (..., S, 1, half)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(positions: Array, d: int) -> Array:
+    half = d // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def softcap(x: Array, cap: float) -> Array:
+    if cap <= 0.0:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def init_attn(key: Array, cfg: ModelConfig) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = lambda *sh: 1.0 / jnp.sqrt(sh[0])
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "wq": (jax.random.normal(k1, (d, h * hd), dt) * s(d)),
+        "wk": (jax.random.normal(k2, (d, kv * hd), dt) * s(d)),
+        "wv": (jax.random.normal(k3, (d, kv * hd), dt) * s(d)),
+        "wo": (jax.random.normal(k4, (h * hd, d), dt) * s(h * hd)),
+    }
+
+
+def _mask_bias(q_pos: Array, k_pos: Array, window: Array | int) -> Array:
+    """Causal (+ optional sliding window) bias computed from positions — never
+    materializes beyond the current (q_block, k_block) tile. ``window`` may be a
+    traced scalar (gemma2 alternates local/global inside scan-over-layers); 0 or
+    negative means full causal attention."""
+    delta = q_pos[:, None] - k_pos[None, :]
+    causal = delta >= 0
+    win_ok = jnp.where(jnp.asarray(window) > 0, delta < jnp.asarray(window), True)
+    return jnp.where(causal & win_ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _repeat_kv(k: Array, rep: int) -> Array:
+    """(B, T, KV, hd) -> (B, T, KV*rep, hd). KV heads are expanded to the full
+    head count *before* the einsums: the (KV, rep) factorization of a
+    model-sharded head axis does not partition (KV < mesh size for most GQA
+    archs), while the expanded H axis does."""
+    return k if rep == 1 else jnp.repeat(k, rep, axis=2)
+
+
+def _attend_direct_g(q, k, v, q_pos, k_pos, window, softcap_val, scale):
+    """Grouped-query einsum without KV expansion — the decode path, where the
+    KV cache is sequence-sharded and q is tiny (gathered)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qh = q.reshape(B, S, KV, rep, hd)
+    scores = jnp.einsum("bsgrh,btgh->bgrst", qh, k).astype(jnp.float32) * scale
+    scores = softcap(scores, softcap_val)
+    scores = scores + _mask_bias(q_pos, k_pos, window)[None, None, None]
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrst,btgh->bsgrh", p, v)
+    return out.reshape(B, S, H, hd)
+
+
+def _attend_direct(q, k, v, q_pos, k_pos, window, softcap_val, scale):
+    """q,k,v: (B,S|T,H,hd) (KV pre-expanded). Direct O(S*T) scores."""
+    B, S, H, hd = q.shape
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) * scale
+    scores = softcap(scores, softcap_val)
+    scores = scores + _mask_bias(q_pos, k_pos, window)[None, None]
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bthd->bshd", p, v)
+
+
+def _attend_chunked(q, k, v, q_pos, k_pos, window, softcap_val, scale,
+                    kv_block: int = 1024):
+    """Online-softmax scan over KV blocks — O(S * kv_block) live memory.
+
+    This is the XLA realization of the flash-attention schedule (the Pallas
+    kernel in kernels/flash_attention.py is the TPU-tiled version); it makes
+    32k-token prefill fit HBM without materializing (S, T) scores.
+    q,k,v: (B, S|T, H, hd), KV pre-expanded to H.
+    """
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    nblk = T // kv_block
+
+    @jax.checkpoint
+    def body(carry, blk):
+        acc, m, l = carry
+        kb, vb, kp = blk                       # (B,kvb,H,hd), (B,kvb,H,hd), (kvb,)
+        s = jnp.einsum("bshd,bthd->bhst", q, kb).astype(jnp.float32) * scale
+        s = softcap(s, softcap_val)
+        s = s + _mask_bias(q_pos, kp, window)[None, None]
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhst,bthd->bhsd", p.astype(q.dtype), vb).astype(jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (acc, m_new, l), None
+
+    kb = k.reshape(B, nblk, kv_block, H, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nblk, kv_block, H, hd).transpose(1, 0, 2, 3, 4)
+    kp = k_pos.reshape(nblk, kv_block)
+    acc0 = jnp.zeros((B, H, S, hd), jnp.float32)
+    m0 = jnp.full((B, H, S), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, S), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (kb, vb, kp))
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    return out.transpose(0, 2, 1, 3)  # (B, S, H, hd)
+
+
+def attention(params: Params, x: Array, cfg: ModelConfig, *,
+              layer_is_local: Array | bool = False,
+              positions: Array | None = None,
+              kv_cache: tuple[Array, Array] | None = None,
+              cache_pos: Array | None = None):
+    chunked_threshold = cfg.attn_direct_max
+    """GQA attention. Training/prefill when kv_cache is None (returns y, (k, v));
+    decode when kv_cache is given (x is (B, 1, D); returns y, updated cache)."""
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    cd = jnp.dtype(cfg.compute_dtype)
+    wq, wk, wv, wo = (params[n].astype(cd) for n in ("wq", "wk", "wv", "wo"))
+    if positions is None:
+        positions = jnp.arange(S)
+
+    q = (x @ wq).reshape(B, S, H, hd)
+    k = (x @ wk).reshape(B, S, KV, hd)
+    v = (x @ wv).reshape(B, S, KV, hd)
+    if cfg.pos_embedding == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    window: Array | int = cfg.window if cfg.window > 0 else 0
+    if cfg.local_global_pattern:
+        # gemma2: even layers local (sliding window), odd layers global. Inside
+        # scan-over-layers ``layer_is_local`` is a traced bool — the dynamic
+        # window flows into the mask bias, so one attention serves both kinds.
+        window = jnp.where(jnp.asarray(layer_is_local), cfg.window, 0)
+
+    if kv_cache is not None:
+        ck, cv = kv_cache                      # (B, T, KV, hd) preallocated
+        T = ck.shape[1]
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_pos, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), cache_pos, 1)
+        # grouped einsum: the cache stays sequence-sharded and un-expanded
+        out = _attend_direct_g(q, ck.astype(cd), cv.astype(cd),
+                               positions, jnp.arange(T), window,
+                               cfg.attn_softcap, scale)
+        y = out.reshape(B, S, H * hd) @ wo
+        return y, (ck, cv)
+
+    rep = H // KV
+    kf, vf = _repeat_kv(k, rep), _repeat_kv(v, rep)
+    if S % 16 == 0:
+        # sequence-parallel attention (archs whose head count does not divide
+        # the model axis, e.g. 40H/24H): shard S over `model` instead of
+        # replicating the whole attention 16x — K/V are gathered per layer
+        # (cheap) while scores/output compute 1/16th per device. No-op unless
+        # the launcher installs the attn_seq rules.
+        q = ctx.constrain(q, "attn_seq_q")
+        kf = ctx.constrain(kf, "attn_seq_kv")
+        vf = ctx.constrain(vf, "attn_seq_kv")
+    kwargs = dict(softcap_val=cfg.attn_softcap, scale=scale)
+    if S > chunked_threshold:
+        kwargs["kv_block"] = min(cfg.attn_kv_block, S)
+        out = _attend_chunked(q, kf, vf, positions, positions, window, **kwargs)
+    else:
+        out = _attend_direct(q, kf, vf, positions, positions, window, **kwargs)
+    y = out.reshape(B, S, H * hd) @ wo
+    return y, (k, v)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key: Array, cfg: ModelConfig, d_ff: int | None = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.param_dtype)
+    s_in, s_out = 1.0 / jnp.sqrt(d), 1.0 / jnp.sqrt(f)
+    return {
+        "w_gate": jax.random.normal(k1, (d, f), dt) * s_in,
+        "w_up": jax.random.normal(k2, (d, f), dt) * s_in,
+        "w_down": jax.random.normal(k3, (f, d), dt) * s_out,
+    }
+
+
+def mlp(params: Params, x: Array, cfg: ModelConfig) -> Array:
+    cd = jnp.dtype(cfg.compute_dtype)
+    act = jax.nn.silu if cfg.activation == "silu" else jax.nn.gelu
+    g = act(x @ params["w_gate"].astype(cd))
+    u = x @ params["w_up"].astype(cd)
+    return (g * u) @ params["w_down"].astype(cd)
+
+
+# ---------------------------------------------------------------------------
+# MoE: top-k routing with capacity + scatter dispatch (EP over the model axis)
+# ---------------------------------------------------------------------------
+
+def init_moe(key: Array, cfg: ModelConfig) -> Params:
+    d, f, e = cfg.d_model, cfg.expert_ff, cfg.num_experts
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    dt = jnp.dtype(cfg.param_dtype)
+    s_in, s_out = 1.0 / jnp.sqrt(d), 1.0 / jnp.sqrt(f)
+    p = {
+        "router": jax.random.normal(k1, (d, e), dt) * s_in,
+        "w_gate": jax.random.normal(k2, (e, d, f), dt) * s_in,
+        "w_up": jax.random.normal(k3, (e, d, f), dt) * s_in,
+        "w_down": jax.random.normal(k4, (e, f, d), dt) * s_out,
+    }
+    if cfg.shared_expert_d_ff:
+        p["shared"] = init_mlp(k5, cfg, cfg.shared_expert_d_ff)
+    return p
+
+
+def _moe_dispatch_group(params: Params, xt: Array, cfg: ModelConfig, cap: int):
+    """Route/dispatch for ONE token group. xt: (Tg, D)."""
+    E, K = cfg.num_experts, cfg.top_k
+    cd = jnp.dtype(cfg.compute_dtype)
+    Tg, D = xt.shape
+
+    logits = (xt @ params["router"].astype(cd)).astype(jnp.float32)   # (Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, K)                               # (Tg, K)
+    gate = (gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)).astype(cd)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = probs.mean(axis=0)                                            # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[eidx.reshape(-1)].add(1.0) / (Tg * K)
+    aux = cfg.router_aux_coef * E * jnp.sum(me * ce)
+
+    # rank of each (token, k) within its expert, via cumsum over tokens
+    onehot = jax.nn.one_hot(eidx, E, dtype=jnp.int32)                  # (Tg,K,E)
+    flat_oh = onehot.reshape(Tg * K, E)
+    ranks = jnp.cumsum(flat_oh, axis=0) - flat_oh                      # exclusive
+    rank = jnp.take_along_axis(ranks, eidx.reshape(Tg * K, 1), axis=1)[:, 0]
+    keep = rank < cap
+    dest = jnp.where(keep, eidx.reshape(-1) * cap + rank, E * cap)     # drop slot
+
+    # index-only scatter (payload D elided): GSPMD replicates scatter
+    # operands across shards, so scattering the (Tg*K, D) activations would
+    # all-gather an (E*cap, D) buffer per layer (~170 GB/layer for qwen);
+    # scattering 4-byte token ids then GATHERING activations stays local.
+    src_tok = jnp.arange(Tg * K, dtype=jnp.int32) // K
+    slot = jnp.full((E * cap + 1,), Tg, jnp.int32).at[dest].set(src_tok)
+    xpad = jnp.concatenate([xt.astype(cd), jnp.zeros((1, D), cd)], axis=0)
+    eb = xpad[slot[:-1]].reshape(E, cap, D)                            # gather
+    return eb, dest, gate, aux
+
+
+def moe(params: Params, x: Array, cfg: ModelConfig) -> tuple[Array, Array]:
+    """Returns (y, aux_loss). Tokens are routed top-k and scatter-dispatched
+    into per-expert capacity buffers PER GROUP (``moe_groups`` = the data
+    shards): routing, rank-cumsum and the scatter are all group-local, so the
+    only cross-device movement is the expert einsum's own sharding (EP
+    all-to-all when experts are model-sharded; nothing when experts are
+    replicated with model-sharded hidden). A single global scatter instead
+    makes GSPMD replicate + all-reduce the whole (E*cap, D) dispatch buffer
+    per layer. Over-capacity tokens are dropped (the residual carries them)."""
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    cd = jnp.dtype(cfg.compute_dtype)
+    T = B * S
+    G = cfg.moe_groups if T % cfg.moe_groups == 0 and T >= cfg.moe_groups else 1
+    cap = max(1, int(cfg.capacity_factor * (T // G) * K / E))
+    xt = x.reshape(G, T // G, D)
+
+    eb, dest, gate, aux = jax.vmap(
+        lambda xg: _moe_dispatch_group(params, xg, cfg, cap))(xt)
+    aux = aux.mean()
+    # pin the dispatch buffer to the group (data) axis — the batched gather's
+    # partitioning is otherwise undecided and GSPMD replicates it (40 GiB/op)
+    eb = ctx.constrain(eb, "moe_eb")
+
+    act = jax.nn.silu if cfg.activation == "silu" else jax.nn.gelu
+    g = act(jnp.einsum("gecd,edf->gecf", eb, params["w_gate"].astype(cd)))
+    g = ctx.constrain(g, "moe_hidden")
+    u = ctx.constrain(jnp.einsum("gecd,edf->gecf", eb,
+                                 params["w_up"].astype(cd)), "moe_hidden")
+    out = jnp.einsum("gecf,efd->gecd", g * u, params["w_down"].astype(cd))
+    out = ctx.constrain(out, "moe_eb")
+
+    def combine_group(out_g, dest_g, gate_g):
+        flat = jnp.concatenate(
+            [out_g.reshape(E * cap, D), jnp.zeros((1, D), cd)], axis=0)
+        gathered = flat[dest_g].reshape(T // G, K, D)                  # dropped->0
+        return jnp.einsum("tkd,tk->td", gathered, gate_g)
+
+    y = jax.vmap(combine_group)(out, dest, gate).reshape(B, S, D)
+
+    if "shared" in params:
+        y = y + mlp(params["shared"], x, cfg).reshape(B, S, D)
+    return y, aux

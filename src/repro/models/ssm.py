@@ -1,0 +1,191 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD algorithm: the sequence is split into chunks of length Q; within a
+chunk the output is a masked (decay-weighted) attention-like matmul — MXU
+friendly — and across chunks a small recurrent state (H, N, P) is carried by a
+scan. This is the TPU-native adaptation: the GPU implementation's fused Triton
+scan becomes (a) this matmul-dominant chunked form and (b) the Pallas kernel in
+kernels/ssd_scan.py for the inner recurrence.
+
+Projections are SPLIT per component (z, x, B, C, dt) rather than fused as in
+the CUDA reference: the x/z/dt outputs are head-aligned so tensor parallelism
+shards heads over the `model` axis without slicing through component
+boundaries; B/C (the small state projections) stay replicated.
+
+Decode is the O(1) recurrent form: state <- state * exp(dt*A) + dt * B outer x.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+Params = dict[str, Any]
+
+
+def init_ssm(key: Array, cfg: ModelConfig) -> Params:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.param_dtype)
+    s = 1.0 / jnp.sqrt(d)
+    return {
+        "w_z": jax.random.normal(ks[0], (d, di), dt) * s,
+        "w_x": jax.random.normal(ks[1], (d, di), dt) * s,
+        "w_B": jax.random.normal(ks[2], (d, n), dt) * s,
+        "w_C": jax.random.normal(ks[3], (d, n), dt) * s,
+        "w_dt": jax.random.normal(ks[4], (d, h), dt) * s,
+        "conv_x": jax.random.normal(ks[5], (cfg.ssm_conv, di), dt) * 0.5,
+        "conv_B": jax.random.normal(ks[6], (cfg.ssm_conv, n), dt) * 0.5,
+        "conv_C": jax.random.normal(ks[7], (cfg.ssm_conv, n), dt) * 0.5,
+        "conv_bias_x": jnp.zeros((di,), dt),
+        "conv_bias_B": jnp.zeros((n,), dt),
+        "conv_bias_C": jnp.zeros((n,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)).astype(dt),
+        "D": jnp.ones((h,), dt),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((h,), 0.01, jnp.float32))).astype(dt),
+        "norm_scale": jnp.zeros((di,), dt),
+        "w_out": jax.random.normal(key, (di, d), dt) * (1.0 / jnp.sqrt(di)),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array, state: Array | None = None):
+    """Depthwise causal conv, kernel (K, C), x (B, S, C). Returns (y, new_state)
+    where state is the last K-1 inputs (decode cache)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)            # (B, S+K-1, C)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K)) + b
+    return jax.nn.silu(y), xp[:, -(K - 1):, :]
+
+
+def _ssd_chunked(xh: Array, dt: Array, A: Array, Bm: Array, Cm: Array, Q: int):
+    """Chunked SSD scan.
+
+    xh: (B, S, H, P) inputs per head; dt: (B, S, H) positive step sizes;
+    A: (H,) negative decay rates; Bm/Cm: (B, S, N) (single group).
+    Returns y: (B, S, H, P).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    nC = S // Q
+    f32 = jnp.float32
+
+    xc = xh.reshape(Bsz, nC, Q, H, P)
+    dtc = dt.reshape(Bsz, nC, Q, H).astype(f32)
+    Bc = Bm.reshape(Bsz, nC, Q, N)
+    Cc = Cm.reshape(Bsz, nC, Q, N)
+
+    dA = dtc * A[None, None, None, :]                  # (B, nC, Q, H), negative
+    seg = jnp.cumsum(dA, axis=2)                       # within-chunk cumulative
+    total = seg[:, :, -1, :]                           # (B, nC, H)
+
+    # decay matrices L[i,j] = exp(seg_i - seg_j) for i >= j
+    li = seg[:, :, :, None, :] - seg[:, :, None, :, :]  # (B,nC,Q,Q,H)
+    mask = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])[None, None, :, :, None]
+    L = jnp.where(mask, jnp.exp(li), 0.0)
+
+    xdt = xc * dtc[..., None].astype(xh.dtype)         # dt-scaled input
+
+    # intra-chunk: Y = (C B^T * L) @ (x dt)
+    cb = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc).astype(f32)  # (B,nC,Q,Q)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp",
+                         (cb[..., None] * L).astype(xh.dtype), xdt)
+
+    # chunk-final states: S_c = sum_j exp(total - seg_j) B_j (x dt)_j
+    decay_to_end = jnp.exp(total[:, :, None, :] - seg)  # (B,nC,Q,H)
+    sb = jnp.einsum("bcqn,bcqh,bcqhp->bchnp",
+                    Bc, decay_to_end.astype(xh.dtype), xdt)  # (B,nC,H,N,P)
+
+    # inter-chunk recurrence over chunk index
+    def body(state, inp):
+        sb_c, total_c, Cc_c, seg_c = inp
+        yprev = jnp.einsum("bqn,bqh,bhnp->bqhp",
+                           Cc_c, jnp.exp(seg_c).astype(Cc_c.dtype),
+                           state.astype(Cc_c.dtype))
+        state = state * jnp.exp(total_c)[:, :, None, None] + sb_c.astype(f32)
+        return state, yprev
+
+    state0 = jnp.zeros((Bsz, H, N, P), f32)
+    xs = (sb.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2),
+          Cc.transpose(1, 0, 2, 3), seg.transpose(1, 0, 2, 3))
+    _, yprev = jax.lax.scan(body, state0, xs)
+    y = y_intra + yprev.transpose(1, 0, 2, 3, 4).astype(y_intra.dtype)
+    return y.reshape(Bsz, S, H, P)
+
+
+def _gated_norm_out(params: Params, y: Array, z: Array, cfg: ModelConfig) -> Array:
+    cd = jnp.dtype(cfg.compute_dtype)
+    y = (y * jax.nn.silu(z)).astype(cd)
+    # f32 bridge after square: keeps the activation cotangent in bf16
+    var = jnp.mean(jnp.square(y).astype(jnp.float32), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + cfg.norm_eps).astype(cd)
+    y = (y * inv) * (1.0 + params["norm_scale"].astype(cd))
+    return y @ params["w_out"].astype(cd)
+
+
+def ssm_block(params: Params, x: Array, cfg: ModelConfig) -> Array:
+    """Training/prefill forward. x: (B, S, D) -> (B, S, D)."""
+    B, S, D = x.shape
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    cd = jnp.dtype(cfg.compute_dtype)
+    z = x @ params["w_z"].astype(cd)
+    xi = x @ params["w_x"].astype(cd)
+    Bm = x @ params["w_B"].astype(cd)
+    Cm = x @ params["w_C"].astype(cd)
+    dt = jax.nn.softplus((x @ params["w_dt"].astype(cd)).astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    xi, _ = _causal_conv(xi, params["conv_x"].astype(cd),
+                         params["conv_bias_x"].astype(cd))
+    Bm, _ = _causal_conv(Bm, params["conv_B"].astype(cd),
+                         params["conv_bias_B"].astype(cd))
+    Cm, _ = _causal_conv(Cm, params["conv_C"].astype(cd),
+                         params["conv_bias_C"].astype(cd))
+    xi = xi.reshape(B, S, h, p)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y = _ssd_chunked(xi, dt, A, Bm, Cm, min(cfg.ssm_chunk, S))
+    y = y + params["D"].astype(cd)[None, None, :, None] * xi
+    return _gated_norm_out(params, y.reshape(B, S, di), z, cfg)
+
+
+def ssm_decode_step(params: Params, x: Array, cfg: ModelConfig,
+                    conv_state: Array, ssd_state: Array):
+    """Single-token recurrent step. x: (B, 1, D).
+    conv_state: (B, K-1, di + 2N); ssd_state: (B, H, N, P) f32."""
+    B = x.shape[0]
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    cd = jnp.dtype(cfg.compute_dtype)
+    z = x @ params["w_z"].astype(cd)
+    xi = x @ params["w_x"].astype(cd)
+    Bm = x @ params["w_B"].astype(cd)
+    Cm = x @ params["w_C"].astype(cd)
+    dt = jax.nn.softplus((x @ params["w_dt"].astype(cd)).astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    cs_x, cs_B, cs_C = (conv_state[..., :di], conv_state[..., di:di + n],
+                        conv_state[..., di + n:])
+    xi, cs_x = _causal_conv(xi, params["conv_x"].astype(cd),
+                            params["conv_bias_x"].astype(cd), cs_x)
+    Bm, cs_B = _causal_conv(Bm, params["conv_B"].astype(cd),
+                            params["conv_bias_B"].astype(cd), cs_B)
+    Cm, cs_C = _causal_conv(Cm, params["conv_C"].astype(cd),
+                            params["conv_bias_C"].astype(cd), cs_C)
+    conv_state = jnp.concatenate(
+        [cs_x.astype(cd), cs_B.astype(cd), cs_C.astype(cd)], axis=-1)
+
+    xi = xi.reshape(B, h, p)
+    Bm1, Cm1 = Bm[:, 0], Cm[:, 0]                      # (B, N)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dt1 = dt[:, 0]                                     # (B, H)
+    dA = jnp.exp(dt1 * A[None, :])
+    upd = jnp.einsum("bn,bhp->bhnp", Bm1.astype(jnp.float32),
+                     (xi * dt1[..., None].astype(cd)).astype(jnp.float32))
+    ssd_state = ssd_state * dA[:, :, None, None] + upd
+    y = jnp.einsum("bhnp,bn->bhp", ssd_state, Cm1.astype(jnp.float32)).astype(cd)
+    y = y + params["D"].astype(cd)[None, :, None] * xi
+    return _gated_norm_out(params, y.reshape(B, 1, di), z, cfg), conv_state, ssd_state

@@ -1,0 +1,414 @@
+"""Model assembly: parameter init, forward (train/prefill), decode step.
+
+Layer stacking uses `lax.scan` over stacked parameters (one traced layer body
+regardless of depth — essential for compiling 80+ dry-run programs on a CPU
+host) with optional per-layer remat. Hybrid (zamba2) runs grouped: scans of
+``shared_attn_every`` SSM layers interleaved with one weight-shared attention
+block (13 applications for 81 layers).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+from repro.parallel import ctx
+
+Array = jax.Array
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_attn_layer(key: Array, cfg: ModelConfig) -> Params:
+    ka, km, kn = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.param_dtype)
+    p: Params = {
+        "ln1": jnp.zeros((cfg.d_model,), dt),
+        "ln2": jnp.zeros((cfg.d_model,), dt),
+        "attn": L.init_attn(ka, cfg),
+        ("moe" if cfg.num_experts else "mlp"):
+            (L.init_moe(km, cfg) if cfg.num_experts else L.init_mlp(km, cfg)),
+    }
+    if cfg.post_norm:
+        p["ln1_post"] = jnp.zeros((cfg.d_model,), dt)
+        p["ln2_post"] = jnp.zeros((cfg.d_model,), dt)
+    return p
+
+
+def _init_ssm_layer(key: Array, cfg: ModelConfig) -> Params:
+    return {
+        "ln": jnp.zeros((cfg.d_model,), jnp.dtype(cfg.param_dtype)),
+        "ssm": S.init_ssm(key, cfg),
+    }
+
+
+def init_params(key: Array, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.param_dtype)
+    params: Params = {"final_norm": jnp.zeros((cfg.d_model,), dt)}
+
+    if cfg.frontend != "audio_stub":
+        params["embed"] = (jax.random.normal(keys[0], (cfg.padded_vocab, cfg.d_model), dt)
+                           * (1.0 / jnp.sqrt(cfg.d_model)))
+    if not cfg.tie_embeddings or cfg.frontend == "audio_stub":
+        params["lm_head"] = (jax.random.normal(keys[1], (cfg.d_model, cfg.padded_vocab), dt)
+                             * (1.0 / jnp.sqrt(cfg.d_model)))
+    if cfg.frontend != "none":
+        params["frontend"] = {
+            "proj": jax.random.normal(keys[2], (cfg.frontend_dim, cfg.d_model), dt)
+                    * (1.0 / jnp.sqrt(cfg.frontend_dim)),
+        }
+
+    layer_keys = jax.random.split(keys[3], cfg.n_layers)
+    if cfg.block_pattern == "attn":
+        params["layers"] = jax.vmap(lambda k: _init_attn_layer(k, cfg))(layer_keys)
+    else:
+        params["layers"] = jax.vmap(lambda k: _init_ssm_layer(k, cfg))(layer_keys)
+        if cfg.block_pattern == "ssm+shared_attn":
+            params["shared_attn"] = _init_attn_layer(keys[4], cfg)
+    return params
+
+
+def param_count(params: Params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _attn_block(lp: Params, x: Array, cfg: ModelConfig, idx: Array,
+                positions: Array, kv_cache=None, cache_pos=None):
+    h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    a, cache = L.attention(
+        lp["attn"], h, cfg,
+        layer_is_local=(idx % 2 == 0) if cfg.local_global_pattern else False,
+        positions=positions, kv_cache=kv_cache, cache_pos=cache_pos)
+    if cfg.post_norm:
+        a = L.rmsnorm(a, lp["ln1_post"], cfg.norm_eps)
+    x = x + a
+    h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.num_experts:
+        m, aux = L.moe(lp["moe"], h, cfg)
+    else:
+        m, aux = L.mlp(lp["mlp"], h, cfg), jnp.zeros((), jnp.float32)
+    if cfg.post_norm:
+        m = L.rmsnorm(m, lp["ln2_post"], cfg.norm_eps)
+    return x + m, aux, cache
+
+
+def _ssm_layer(lp: Params, x: Array, cfg: ModelConfig):
+    return x + S.ssm_block(lp["ssm"], L.rmsnorm(x, lp["ln"], cfg.norm_eps), cfg)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params: Params, cfg: ModelConfig, tokens: Array | None,
+                 embeds: Array | None) -> Array:
+    cd = jnp.dtype(cfg.compute_dtype)
+    parts = []
+    if embeds is not None:
+        parts.append(embeds.astype(cd) @ params["frontend"]["proj"].astype(cd))
+    if tokens is not None:
+        parts.append(params["embed"].astype(cd)[tokens])
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    if cfg.scale_embeddings:
+        x = x * jnp.sqrt(cfg.d_model).astype(cd)
+    if cfg.pos_embedding == "sinusoidal":
+        pos = L.sinusoidal_pos(jnp.arange(x.shape[1]), cfg.d_model)
+        x = x + pos[None].astype(cd)
+    return x
+
+
+def _head_logits(params: Params, cfg: ModelConfig, x: Array) -> Array:
+    """LM-head matmul on (already final-normed) hidden states -> f32 logits."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = x @ head.astype(cd)
+    logits = L.softcap(logits, cfg.final_softcap)
+    # mask vocab padding so the softmax distribution is over real tokens only
+    if cfg.padded_vocab != cfg.vocab:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad_mask, L.NEG_INF, logits.astype(jnp.float32))
+    return logits.astype(jnp.float32)
+
+
+def logits_from_hidden(params: Params, cfg: ModelConfig, x: Array) -> Array:
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return _head_logits(params, cfg, x)
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _scan_layer_blocks(x: Array, layers: Params, idxs: Array,
+                       block_fn, cfg: ModelConfig) -> tuple[Array, Array]:
+    """scan over layers in checkpoint groups of ``remat_group``: one residual
+    stash entry per group instead of per layer (the stash dominates training
+    HBM at long sequence lengths)."""
+    n = idxs.shape[0]
+    G = cfg.remat_group if (cfg.remat and n % cfg.remat_group == 0) else 1
+
+    if not cfg.scan_layers:
+        def one_layer(lp, x, i):
+            lp = ctx.constrain_layer_weights(lp)
+            return block_fn(lp, x, jnp.asarray(i))
+
+        if cfg.remat:
+            one_layer = jax.checkpoint(one_layer, static_argnums=(2,))
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(n):
+            lp = jax.tree.map(lambda v: v[i], layers)
+            x, a = one_layer(lp, x, i)
+            aux = aux + a
+        return x, aux
+
+    def body(carry, inp):
+        x, aux = carry
+        lp_g, idx_g = inp
+        # barrier: discourage XLA from hoisting upcasts of the remat stash out
+        # of the backward loop (a 2x f32 copy of every saved layer input)
+        x = jax.lax.optimization_barrier(x)
+        for j in range(G):
+            lp = jax.tree.map(lambda v: v[j], lp_g)
+            lp = ctx.constrain_layer_weights(lp)
+            x, a = block_fn(lp, x, idx_g[j])
+            aux = aux + a
+        return (x, aux), None
+
+    body = _maybe_remat(body, cfg)
+    grouped = jax.tree.map(lambda v: v.reshape(n // G, G, *v.shape[1:]), layers)
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (grouped, idxs.reshape(n // G, G)))
+    return x, aux
+
+
+def forward_hidden(params: Params, cfg: ModelConfig,
+                   tokens: Array | None = None,
+                   embeds: Array | None = None) -> tuple[Array, Array]:
+    """Backbone forward -> (final-normed hidden (B, S, D), aux_loss)."""
+    x = embed_inputs(params, cfg, tokens, embeds)
+    Ssz = x.shape[1]
+    positions = jnp.arange(Ssz)
+
+    if cfg.block_pattern == "attn":
+        def block(lp, x, idx):
+            x, a, _ = _attn_block(lp, x, cfg, idx, positions)
+            return x, a
+
+        x, aux = _scan_layer_blocks(x, params["layers"],
+                                    jnp.arange(cfg.n_layers), block, cfg)
+
+    elif cfg.block_pattern == "ssm":
+        def block(lp, x, idx):
+            return _ssm_layer(lp, x, cfg), jnp.zeros((), jnp.float32)
+
+        x, aux = _scan_layer_blocks(x, params["layers"],
+                                    jnp.arange(cfg.n_layers), block, cfg)
+
+    else:  # ssm+shared_attn (zamba2)
+        every = cfg.shared_attn_every
+        n_groups = cfg.n_layers // every
+        tail = cfg.n_layers - n_groups * every
+
+        def block(lp, x, idx):
+            return _ssm_layer(lp, x, cfg), jnp.zeros((), jnp.float32)
+
+        sl = lambda tree, a, b: jax.tree.map(lambda v: v[a:b], tree)
+        shared = params["shared_attn"]
+        aux = jnp.zeros((), jnp.float32)
+
+        # one checkpoint per (ssm group + shared attn application): 13 stash
+        # entries for 81 layers instead of 81
+        def group_fn(x, lps, g):
+            import dataclasses
+            inner = dataclasses.replace(cfg, remat=False)
+            x, _ = _scan_layer_blocks(x, lps, jnp.arange(every), block, inner)
+            x, a, _ = _attn_block(shared, x, cfg, jnp.asarray(g), positions)
+            return x, a
+
+        if cfg.remat:
+            group_fn = jax.checkpoint(group_fn, static_argnums=(2,))
+        for g in range(n_groups):
+            x, a = group_fn(x, sl(params["layers"], g * every, (g + 1) * every), g)
+            aux = aux + a
+        if tail:
+            x, _ = _scan_layer_blocks(
+                x, sl(params["layers"], n_groups * every, cfg.n_layers),
+                jnp.arange(tail), block, cfg)
+
+    return L.rmsnorm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: Array | None = None,
+            embeds: Array | None = None) -> tuple[Array, Array]:
+    """Returns (logits (B, S, Vp) f32, aux_loss)."""
+    x, aux = forward_hidden(params, cfg, tokens=tokens, embeds=embeds)
+    return _head_logits(params, cfg, x), aux
+
+
+def _ce_from_logits(logits: Array, labels: Array):
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    return jnp.sum((lse - ll) * mask), jnp.sum(mask)
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: dict[str, Array]):
+    """Next-token cross-entropy; label -100 positions are masked.
+
+    The loss is computed in ``ce_chunks`` sequence chunks so that for
+    256k-vocab archs the f32 logits (and their backward scatter) never
+    materialize beyond (B, S/chunks, V) — the CE pipeline was the peak-memory
+    bottleneck of every big-vocab train cell, not the layer stack."""
+    labels = batch["labels"]
+    n_chunks = cfg.ce_chunks if labels.shape[1] % max(cfg.ce_chunks, 1) == 0 else 1
+    if n_chunks <= 1:
+        logits, aux = forward(params, cfg, tokens=batch.get("tokens"),
+                              embeds=batch.get("embeds"))
+        tot, cnt = _ce_from_logits(logits, labels)
+        ce = tot / jnp.maximum(cnt, 1.0)
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    x, aux = forward_hidden(params, cfg, tokens=batch.get("tokens"),
+                            embeds=batch.get("embeds"))
+    B, S, D = x.shape
+    C = S // n_chunks
+    xc = x.reshape(B, n_chunks, C, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n_chunks, C).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        xs, ls = inp
+        logits = _head_logits(params, cfg, xs)
+        t, c = _ce_from_logits(logits, ls)
+        return (carry[0] + t, carry[1] + c), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (xc, lc))
+    ce = tot / jnp.maximum(cnt, 1.0)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode with static caches
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    """Preallocated decode caches (ShapeDtypeStruct-compatible pytree)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    state: Params = {"pos": jnp.zeros((), jnp.int32)}
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    if cfg.block_pattern == "attn":
+        shape = (cfg.n_layers, batch, max_len, kv, hd)
+        state["k"] = jnp.zeros(shape, cd)
+        state["v"] = jnp.zeros(shape, cd)
+    else:
+        conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+        state["conv"] = jnp.zeros(
+            (cfg.n_layers, batch, cfg.ssm_conv - 1, conv_ch), cd)
+        state["ssd"] = jnp.zeros(
+            (cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+            jnp.float32)
+        if cfg.block_pattern == "ssm+shared_attn":
+            n_apps = cfg.n_layers // cfg.shared_attn_every
+            state["k"] = jnp.zeros((n_apps, batch, max_len, kv, hd), cd)
+            state["v"] = jnp.zeros((n_apps, batch, max_len, kv, hd), cd)
+    return state
+
+
+def decode_step(params: Params, cfg: ModelConfig, state: Params,
+                tokens: Array | None = None, embeds: Array | None = None):
+    """One decode step: new token(s) (B, 1) -> logits (B, Vp), updated state."""
+    x = embed_inputs(params, cfg, tokens, embeds)
+    pos = state["pos"]
+    positions = pos[None]  # (1,)
+
+    if cfg.block_pattern == "attn":
+        def body(carry, inp):
+            x = carry
+            lp, idx, kc, vc = inp
+            x, _, (kc, vc) = _attn_block(lp, x, cfg, idx, positions,
+                                         kv_cache=(kc, vc), cache_pos=pos)
+            return x, (kc, vc)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x,
+            (params["layers"], jnp.arange(cfg.n_layers), state["k"], state["v"]))
+        new_state = {**state, "pos": pos + 1, "k": k_new, "v": v_new}
+
+    elif cfg.block_pattern == "ssm":
+        def body(carry, inp):
+            x = carry
+            lp, conv, ssd = inp
+            h = L.rmsnorm(x, lp["ln"], cfg.norm_eps)
+            y, conv, ssd = S.ssm_decode_step(lp["ssm"], h, cfg, conv, ssd)
+            return x + y, (conv, ssd)
+
+        x, (conv_new, ssd_new) = jax.lax.scan(
+            body, x, (params["layers"], state["conv"], state["ssd"]))
+        new_state = {**state, "pos": pos + 1, "conv": conv_new, "ssd": ssd_new}
+
+    else:  # zamba2 hybrid
+        every = cfg.shared_attn_every
+        n_groups = cfg.n_layers // every
+        tail = cfg.n_layers - n_groups * every
+        sl = lambda tree, a, b: jax.tree.map(lambda v: v[a:b], tree)
+        shared = params["shared_attn"]
+        convs, ssds, ks, vs = [], [], [], []
+
+        def ssm_scan(x, lps, convs_g, ssds_g):
+            def body(carry, inp):
+                x = carry
+                lp, conv, ssd = inp
+                h = L.rmsnorm(x, lp["ln"], cfg.norm_eps)
+                y, conv, ssd = S.ssm_decode_step(lp["ssm"], h, cfg, conv, ssd)
+                return x + y, (conv, ssd)
+            return jax.lax.scan(body, x, (lps, convs_g, ssds_g))
+
+        for g in range(n_groups):
+            lps = sl(params["layers"], g * every, (g + 1) * every)
+            x, (c, s_) = ssm_scan(x, lps, state["conv"][g * every:(g + 1) * every],
+                                  state["ssd"][g * every:(g + 1) * every])
+            convs.append(c); ssds.append(s_)
+            x, _, (kc, vc) = _attn_block(shared, x, cfg, jnp.asarray(g), positions,
+                                         kv_cache=(state["k"][g], state["v"][g]),
+                                         cache_pos=pos)
+            ks.append(kc); vs.append(vc)
+        if tail:
+            lps = sl(params["layers"], n_groups * every, cfg.n_layers)
+            x, (c, s_) = ssm_scan(x, lps, state["conv"][n_groups * every:],
+                                  state["ssd"][n_groups * every:])
+            convs.append(c); ssds.append(s_)
+        new_state = {
+            **state, "pos": pos + 1,
+            "conv": jnp.concatenate(convs, axis=0),
+            "ssd": jnp.concatenate(ssds, axis=0),
+            "k": jnp.stack(ks), "v": jnp.stack(vs),
+        }
+
+    logits = logits_from_hidden(params, cfg, x)[:, -1]
+    return logits, new_state
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: Array | None = None,
+            embeds: Array | None = None):
+    """Prefill forward: returns last-position logits (the serving prefill step;
+    cache write-back shares the forward path and is measured by the same cell)."""
+    logits, _ = forward(params, cfg, tokens=tokens, embeds=embeds)
+    return logits[:, -1]

@@ -1,0 +1,4 @@
+from repro.optim import adam  # noqa: F401
+from repro.optim.adam import AdamConfig, AdamState  # noqa: F401
+from repro.optim.descent import DescentConfig, asd, avd, bfgs, fcg  # noqa: F401
+from repro.optim.numgrad import make_grad, richardson_grad  # noqa: F401

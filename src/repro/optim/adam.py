@@ -1,0 +1,129 @@
+"""Adam — popt4jlib.GradientDescent.stochastic.Adam [9], in two forms.
+
+1. ``adam_minimize``: the paper's FunctionIntf optimizer (budget-capped,
+   Richardson or autodiff gradients) for the Fig.4-style testbed.
+2. ``init``/``update``: a pytree Adam(W) for the LM training substrate — this is
+   the paper's Adam running as the production trainer, with decoupled weight
+   decay, global-norm clipping and a warmup+cosine schedule. Pure functions:
+   the distribution layer shards the state like the params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import OptimizeResult
+from repro.functions.benchmarks import Function
+from repro.optim.numgrad import make_grad
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0          # global-norm clip; <=0 disables
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+class AdamState(NamedTuple):
+    step: Array
+    mu: PyTree
+    nu: PyTree
+
+
+def init(params: PyTree) -> AdamState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                     nu=jax.tree.map(jnp.copy, zeros))
+
+
+def schedule(step: Array, cfg: AdamConfig) -> Array:
+    """Linear warmup then cosine decay to min_lr_frac * lr."""
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * cos
+
+
+def update(grads: PyTree, state: AdamState, params: PyTree,
+           cfg: AdamConfig) -> tuple[PyTree, AdamState]:
+    step = state.step + 1
+    if cfg.grad_clip > 0:
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    mu = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g.astype(jnp.float32),
+                      state.mu, grads)
+    nu = jax.tree.map(lambda v, g: cfg.b2 * v
+                      + (1 - cfg.b2) * jnp.square(g.astype(jnp.float32)),
+                      state.nu, grads)
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+    lr = schedule(state.step, cfg)
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                      + cfg.weight_decay * p.astype(jnp.float32))
+        return (p.astype(jnp.float32) - delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamState(step=step, mu=mu, nu=nu)
+
+
+# ---------------------------------------------------------------------------
+# FunctionIntf form (Fig.4 testbed)
+# ---------------------------------------------------------------------------
+
+def adam_minimize(f: Function, key: Array, dim: int, max_evals: int = 100_000,
+                  lr: float = 0.05, grad_mode: str = "richardson",
+                  b1: float = 0.9, b2: float = 0.999,
+                  eps: float = 1e-8) -> OptimizeResult:
+    lo, hi = f.lo, f.hi
+    grad_fn = make_grad(f.fn, grad_mode)
+
+    def run(key):
+        x = jax.random.uniform(key, (dim,), minval=lo, maxval=hi)
+        m = jnp.zeros_like(x)
+        v = jnp.zeros_like(x)
+        fx = f.fn(x)
+
+        def cond(c):
+            return c[-1] < max_evals
+
+        def body(c):
+            x, m, v, t, bx, bf, evals = c
+            g, ge = grad_fn(x)
+            t = t + 1
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / (1 - b1 ** t)
+            vh = v / (1 - b2 ** t)
+            x = jnp.clip(x - lr * mh / (jnp.sqrt(vh) + eps), lo, hi)
+            fx = f.fn(x)
+            best = fx < bf
+            return (x, m, v, t,
+                    jnp.where(best, x, bx), jnp.where(best, fx, bf),
+                    evals + ge + 1)
+
+        out = jax.lax.while_loop(
+            cond, body, (x, m, v, jnp.asarray(0.0), x, fx, jnp.asarray(1)))
+        return out[4], out[5], out[6]
+
+    bx, bf, ev = jax.jit(run)(key)
+    return OptimizeResult(arg=bx, value=float(bf), n_evals=int(ev))

@@ -1,0 +1,44 @@
+"""Activation/weight sharding-hint context.
+
+Model code stays mesh-agnostic; the launcher installs concrete NamedShardings
+here around trace time. ``constrain_layer_weights`` pins the sharding of the
+per-layer weight slice *inside* the layer loop — this is what keeps GSPMD from
+hoisting the FSDP all-gather of the whole stacked parameter tensor out of the
+scan (the difference between O(one layer) and O(all params) temp memory).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+import jax
+
+_RULES: dict[str, Any] = {}
+
+
+@contextlib.contextmanager
+def sharding_rules(**rules):
+    old = dict(_RULES)
+    _RULES.update(rules)
+    try:
+        yield
+    finally:
+        _RULES.clear()
+        _RULES.update(old)
+
+
+def constrain_layer_weights(lp: Any) -> Any:
+    """Apply the per-layer compute shardings (if installed) to a sliced layer
+    params pytree."""
+    sh = _RULES.get("layer_weights")
+    if sh is None:
+        return lp
+    return jax.tree.map(
+        lambda x, s: jax.lax.with_sharding_constraint(x, s) if s is not None else x,
+        lp, sh)
+
+
+def constrain(x: jax.Array, key: str) -> jax.Array:
+    """Optional activation constraint hook (hillclimb lever)."""
+    s = _RULES.get(key)
+    return x if s is None else jax.lax.with_sharding_constraint(x, s)

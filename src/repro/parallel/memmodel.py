@@ -1,0 +1,103 @@
+"""Analytic per-device HBM model for each (arch × shape × mesh) cell.
+
+Why this exists: the dry-run compiles on the CPU backend, and XLA:CPU has no
+native bf16 — every bf16 arithmetic op is legalized to f32 with converts, so
+``memory_analysis()`` reports f32-sized copies of bf16 buffers (stash,
+activations, collectives). The measured number is kept as an *upper bound*;
+this model gives the TPU-native expectation from first principles:
+
+  train: master params (f32, storage-sharded) + Adam moments (2x) +
+         grads (f32, storage-sharded) + bf16 compute copies (TP-sharded) +
+         remat stash (ceil(L/G) x B_dev*S*D bf16) + per-group working set +
+         chunked-CE logits + batch
+  serve: bf16 params (TP-sharded) + caches (sharded per decode specs) +
+         activation working set
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+
+def _axis_sizes(mesh_axes: tuple[str, ...]) -> dict[str, int]:
+    return {"pod": 2, "data": 16, "model": 16} if "pod" in mesh_axes else \
+        {"data": 16, "model": 16}
+
+
+def _shard_fraction(spec, sizes: dict[str, int]) -> float:
+    denom = 1
+    for part in spec:
+        if part is None:
+            continue
+        for ax in (part if isinstance(part, tuple) else (part,)):
+            denom *= sizes.get(ax, 1)
+    return 1.0 / denom
+
+
+def sharded_bytes(shapes: PyTree, specs: PyTree, sizes: dict[str, int],
+                  itemsize: int | None = None) -> float:
+    total = 0.0
+    flat_s = jax.tree_util.tree_leaves(shapes)
+    flat_p = jax.tree_util.tree_leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    for arr, spec in zip(flat_s, flat_p):
+        isz = itemsize if itemsize is not None else np.dtype(arr.dtype).itemsize
+        total += math.prod(arr.shape) * isz * _shard_fraction(spec, sizes)
+    return total
+
+
+def analytic_memory(cfg: ModelConfig, kind: str, mesh_axes: tuple[str, ...],
+                    B: int, S: int, params_shape: PyTree, p_specs: PyTree,
+                    c_specs: PyTree | None, state_shape: PyTree = None,
+                    state_specs: PyTree = None) -> dict[str, float]:
+    sizes = _axis_sizes(mesh_axes)
+    dax = sizes["data"] * sizes.get("pod", 1)
+    b_dev = max(1, B // dax) if B % dax == 0 else B
+    D = cfg.d_model
+    G = cfg.remat_group if cfg.n_layers % cfg.remat_group == 0 else 1
+
+    out: dict[str, float] = {}
+    if kind == "train":
+        master = sharded_bytes(params_shape, p_specs, sizes, itemsize=4)
+        out["master_params"] = master
+        out["adam_moments"] = 2 * master
+        out["grads"] = master
+        comp_specs = c_specs if c_specs is not None else p_specs
+        out["bf16_compute_copies"] = sharded_bytes(params_shape, comp_specs,
+                                                   sizes, itemsize=2)
+        if cfg.block_pattern == "ssm+shared_attn":
+            n_entries = cfg.n_layers // cfg.shared_attn_every + 1
+        else:
+            n_entries = math.ceil(cfg.n_layers / G)
+        out["remat_stash"] = n_entries * b_dev * S * D * 2
+        # transient working set during a group's backward recompute: the
+        # scheduler frees layer intermediates as it goes — ~2 layers live
+        # (4 full-width residual/cotangent streams + widest hidden each)
+        ff_shard = max(cfg.d_ff, cfg.expert_ff, cfg.n_heads * cfg.hd) / sizes["model"]
+        out["working_set"] = (min(G, 2) * b_dev * S * (4 * D + 2 * ff_shard) * 2)
+        n_chunks = cfg.ce_chunks if S % max(cfg.ce_chunks, 1) == 0 else 1
+        out["ce_logits"] = 2 * b_dev * (S // n_chunks) * (cfg.padded_vocab / sizes["model"]) * 4
+        out["batch"] = 2 * b_dev * S * 4
+    else:
+        comp_specs = c_specs if c_specs is not None else p_specs
+        out["bf16_params"] = sharded_bytes(params_shape, comp_specs, sizes,
+                                           itemsize=2)
+        if state_shape is not None:
+            out["caches"] = sharded_bytes(state_shape, state_specs, sizes)
+        width = 4 * D + 2 * max(cfg.d_ff, cfg.n_heads * cfg.hd) / sizes["model"]
+        s_eff = S if kind == "prefill" else 1
+        out["working_set"] = b_dev * s_eff * width * 2
+        if kind == "prefill":
+            out["attn_chunk"] = (b_dev * cfg.n_heads / sizes["model"]
+                                 * S * cfg.attn_kv_block * 4)
+        out["logits"] = b_dev * (cfg.padded_vocab / sizes["model"]) * 4 * (
+            1 if kind == "decode" else 1)
+    out["total"] = sum(out.values())
+    return out

@@ -1,0 +1,258 @@
+"""Sharding rules: PartitionSpec pytrees for params, optimizer state, batches
+and decode caches, for both production meshes.
+
+Strategy (see DESIGN.md + EXPERIMENTS.md §Perf for measured trade-offs):
+
+  tp        Megatron 1-D tensor parallelism over the ``model`` axis:
+            attention heads / FFN hidden / vocab are model-sharded; weights
+            replicated over (pod, data); batch over (pod, data).
+  tp+fsdp   same compute sharding, but master weights and Adam moments are
+            additionally sharded over the data axes (ZeRO-3 storage); XLA
+            all-gathers weights at use and reduce-scatters gradients.
+
+Edge rules (driven by divisibility against the fixed 16-wide model axis):
+  * KV-head projections are model-sharded only when n_kv_heads % 16 == 0,
+    else replicated (GQA archs with kv=8: the KV tensors are small).
+  * Archs with n_heads % 16 != 0 (musicgen: 24H) replicate attention weights;
+    their attention parallelism comes from batch/sequence sharding.
+  * MoE experts shard over ``model`` when num_experts % 16 == 0 (llama4);
+    otherwise (qwen2-moe: 60) experts stay local and the per-expert hidden
+    dim shards over ``model``.
+  * Decode KV caches shard the *sequence* dim over ``model`` (sequence-
+    parallel decode attention) — KV-head counts never divide 16 uniformly,
+    sequence lengths always do.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+PyTree = Any
+TP = 16  # fixed model-axis width of the production meshes
+
+
+def _dax(mesh_axes: tuple[str, ...]) -> tuple[str, ...] | str:
+    return ("pod", "data") if "pod" in mesh_axes else "data"
+
+
+def _div(n: int, by: int) -> bool:
+    return n % by == 0
+
+
+def _all_axes(mesh_axes: tuple[str, ...]) -> tuple[str, ...]:
+    return tuple(mesh_axes)  # ("pod","data","model") or ("data","model")
+
+
+def _dp_zero1_specs(cfg: ModelConfig, mesh_axes: tuple[str, ...]) -> PyTree:
+    """sharding_mode="dp+zero1": pure data parallelism over EVERY mesh axis
+    (batch over (pod, data, model)); master params + Adam moments sharded over
+    all chips on each weight's largest dim (ZeRO-1). Compute weights are
+    replicated (gathered once per step by the compute-spec constraint) — for
+    sub-3B archs this trades a small weight all-gather for the elimination of
+    every per-layer tensor-parallel all-reduce."""
+    allax = _all_axes(mesh_axes)
+    n = 1
+    for a in allax:
+        n *= {"pod": 2}.get(a, 16)
+
+    def biggest_dim_spec(arr) -> P:
+        dims = list(arr.shape)
+        # shard the largest dim divisible by the full device count
+        order = sorted(range(len(dims)), key=lambda i: -dims[i])
+        for i in order:
+            if dims[i] % n == 0:
+                return P(*[allax if j == i else None for j in range(len(dims))])
+        for i in order:  # fall back to data axes only
+            nd = n // 16
+            if nd > 1 and dims[i] % nd == 0:
+                dx = tuple(a for a in allax if a != "model")
+                return P(*[dx if j == i else None for j in range(len(dims))])
+        return P(*([None] * len(dims)))
+
+    from repro.models.transformer import init_params
+    pshape = jax.eval_shape(lambda k: init_params(k, cfg),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return jax.tree.map(biggest_dim_spec, pshape)
+
+
+def param_specs(cfg: ModelConfig, mesh_axes: tuple[str, ...]) -> PyTree:
+    """PartitionSpec pytree matching init_params(cfg) structure."""
+    if cfg.sharding_mode == "dp+zero1":
+        return _dp_zero1_specs(cfg, mesh_axes)
+    dax = _dax(mesh_axes)
+    fsdp = cfg.sharding_mode == "tp+fsdp"
+    # FSDP shards the "big other dim" of each weight over the data axes.
+    # NOTE: on its own, GSPMD hoists the resulting all-gather of scan xs out of
+    # the layer loop (O(all params) temp memory); ctx.constrain_layer_weights
+    # pins the gather to the per-layer slice inside the loop (see launch/).
+    fs = dax if fsdp else None
+    heads_ok = _div(cfg.n_heads, TP)
+    kv_ok = _div(cfg.n_kv_heads, TP)
+    experts_ok = cfg.num_experts > 0 and _div(cfg.num_experts, TP)
+
+    def attn_spec(f):
+        if not heads_ok:                   # musicgen: replicate attn weights
+            return {"wq": P(f, None), "wk": P(f, None),
+                    "wv": P(f, None), "wo": P(None, f)}
+        return {
+            "wq": P(f, "model"),
+            "wk": P(f, "model") if kv_ok else P(f, None),
+            "wv": P(f, "model") if kv_ok else P(f, None),
+            "wo": P("model", f),
+        }
+
+    def mlp_spec(f):
+        return {"w_gate": P(f, "model"), "w_up": P(f, "model"),
+                "w_down": P("model", f)}
+
+    def moe_spec(f):
+        if experts_ok:
+            # EP over model + expert-hidden over data: both einsums are local
+            # (contraction dims unsharded per tile) with one small activation
+            # all-reduce — routed experts never need a weight gather, so this
+            # 2D sharding serves storage AND compute (llama4: 96B experts ->
+            # 0.75 GB bf16/device).
+            s = {"router": P(None, None),
+                 "w_gate": P("model", None, f),
+                 "w_up": P("model", None, f),
+                 "w_down": P("model", f, None)}
+        else:                              # qwen2-moe (60e): hidden over model
+            s = {"router": P(None, None),
+                 "w_gate": P(None, f, "model"),
+                 "w_up": P(None, f, "model"),
+                 "w_down": P(None, "model", f)}
+        if cfg.shared_expert_d_ff:
+            s["shared"] = mlp_spec(f)
+        return s
+
+    def ssm_spec(f):
+        return {
+            "w_z": P(f, "model"), "w_x": P(f, "model"),
+            "w_B": P(f, None), "w_C": P(f, None), "w_dt": P(f, "model"),
+            "conv_x": P(None, "model"), "conv_B": P(None, None),
+            "conv_C": P(None, None),
+            "conv_bias_x": P("model"), "conv_bias_B": P(None),
+            "conv_bias_C": P(None),
+            "A_log": P("model"), "D": P("model"), "dt_bias": P("model"),
+            "norm_scale": P("model"),
+            "w_out": P("model", f),
+        }
+
+    def attn_layer(f):
+        d = {"ln1": P(None), "ln2": P(None), "attn": attn_spec(f),
+             ("moe" if cfg.num_experts else "mlp"):
+                 (moe_spec(f) if cfg.num_experts else mlp_spec(f))}
+        if cfg.post_norm:
+            d["ln1_post"] = P(None)
+            d["ln2_post"] = P(None)
+        return d
+
+    def stack(tree):   # layer-stacked params carry a leading L axis
+        return jax.tree.map(lambda s: P(None, *s), tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    specs: dict = {"final_norm": P(None)}
+    if cfg.frontend != "audio_stub":
+        specs["embed"] = P("model", fs)
+    if not cfg.tie_embeddings or cfg.frontend == "audio_stub":
+        specs["lm_head"] = P(fs, "model")
+    if cfg.frontend != "none":
+        specs["frontend"] = {"proj": P(None, None)}
+    if cfg.block_pattern == "attn":
+        specs["layers"] = stack(attn_layer(fs))
+    else:
+        specs["layers"] = stack({"ln": P(None), "ssm": ssm_spec(fs)})
+        if cfg.block_pattern == "ssm+shared_attn":
+            specs["shared_attn"] = attn_layer(fs)
+    return specs
+
+
+def compute_specs(cfg: ModelConfig, mesh_axes: tuple[str, ...]) -> PyTree | None:
+    """COMPUTE-time weight shardings for tp+fsdp archs: the gather-once-per-step
+    ZeRO scheme. The train step casts master->bf16 and constrains every weight
+    to these TP-only specs — ONE all-gather over the data axes per step,
+    deliberately outside the layer loop (hoisting it is the point), and
+    autodiff turns its transpose into the grad reduce-scatter. Routed-expert
+    weights keep their 2D sharding (they never need gathering — see moe_spec).
+
+    Returns None for pure-tp archs (compute == storage, no-op)."""
+    import dataclasses
+    if cfg.sharding_mode == "dp+zero1":
+        # compute weights fully replicated: one all-gather per step, zero
+        # per-layer collectives
+        storage = _dp_zero1_specs(cfg, mesh_axes)
+        return jax.tree.map(lambda s: P(*([None] * len(s))), storage,
+                            is_leaf=lambda x: isinstance(x, P))
+    if cfg.sharding_mode != "tp+fsdp":
+        return None
+    tp_cfg = dataclasses.replace(cfg, sharding_mode="tp")
+    specs = param_specs(tp_cfg, mesh_axes)
+    if cfg.num_experts and _div(cfg.num_experts, TP):
+        moe2d = param_specs(cfg, mesh_axes)["layers"]["moe"]
+        for kname in ("w_gate", "w_up", "w_down"):
+            specs["layers"]["moe"][kname] = moe2d[kname]
+    return specs
+
+
+def opt_state_specs(cfg: ModelConfig, mesh_axes: tuple[str, ...]) -> PyTree:
+    """AdamState(step, mu, nu): moments shard like params."""
+    from repro.optim.adam import AdamState
+    ps = param_specs(cfg, mesh_axes)
+    return AdamState(step=P(), mu=ps, nu=jax.tree.map(
+        lambda s: s, ps, is_leaf=lambda x: isinstance(x, P)))
+
+
+def batch_specs(cfg: ModelConfig, mesh_axes: tuple[str, ...],
+                global_batch: int) -> PyTree:
+    if cfg.sharding_mode == "dp+zero1":
+        allax = _all_axes(mesh_axes)
+        n = 512 if "pod" in mesh_axes else 256
+        bax = allax if _div(global_batch, n) else (
+            _dax(mesh_axes) if _div(global_batch, n // 16) else None)
+        out: dict = {}
+        if cfg.frontend == "audio_stub":
+            out["embeds"] = P(bax, None, None)
+        elif cfg.frontend == "vlm_stub":
+            out["embeds"] = P(bax, None, None)
+            out["tokens"] = P(bax, None)
+        else:
+            out["tokens"] = P(bax, None)
+        return out, bax
+    dax = _dax(mesh_axes)
+    ndev = 32 if "pod" in mesh_axes else 16
+    bax = dax if _div(global_batch, ndev) else None
+    out: dict = {}
+    if cfg.frontend == "audio_stub":
+        out["embeds"] = P(bax, None, None)
+    elif cfg.frontend == "vlm_stub":
+        out["embeds"] = P(bax, None, None)
+        out["tokens"] = P(bax, None)
+    else:
+        out["tokens"] = P(bax, None)
+    return out, bax
+
+
+def decode_state_specs(cfg: ModelConfig, mesh_axes: tuple[str, ...],
+                       global_batch: int) -> PyTree:
+    _, bax = batch_specs(cfg, mesh_axes, global_batch)
+    specs: dict = {"pos": P()}
+    if cfg.block_pattern == "attn":
+        specs["k"] = P(None, bax, "model", None, None)   # sequence-sharded cache
+        specs["v"] = P(None, bax, "model", None, None)
+    else:
+        specs["conv"] = P(None, bax, None, "model")
+        specs["ssd"] = P(None, bax, "model", None, None)
+        if cfg.block_pattern == "ssm+shared_attn":
+            specs["k"] = P(None, bax, "model", None, None)
+            specs["v"] = P(None, bax, "model", None, None)
+    return specs
+
+
+def to_shardings(mesh: Mesh, spec_tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

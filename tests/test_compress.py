@@ -1,0 +1,46 @@
+"""int8 gradient compression (parallel/compress.py): error bound, unbiasedness
+(stochastic rounding), and tree round-trip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.parallel.compress import (compress_tree, decompress_tree,
+                                     dequantize, quantize)
+
+KEY = jax.random.PRNGKey(9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.floats(1e-3, 1e3))
+def test_quantize_error_bound(seed, scale):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (256,)) * scale
+    q, s = quantize(x, jax.random.fold_in(jax.random.PRNGKey(seed), 1))
+    err = jnp.abs(dequantize(q, s) - x)
+    # stochastic rounding error is bounded by one quantization step
+    assert float(jnp.max(err)) <= float(s) * 1.0 + 1e-6
+
+
+def test_quantize_unbiased():
+    """E[dequantize(quantize(x))] = x under stochastic rounding."""
+    x = jnp.full((64,), 0.3)     # deliberately between grid points
+    acc = jnp.zeros_like(x)
+    n = 300
+    for i in range(n):
+        q, s = quantize(x, jax.random.fold_in(KEY, i))
+        acc = acc + dequantize(q, s)
+    mean = acc / n
+    np.testing.assert_allclose(np.asarray(mean), 0.3, atol=2e-3)
+
+
+def test_tree_roundtrip():
+    tree = {"a": jax.random.normal(KEY, (32, 8)),
+            "b": {"c": jax.random.normal(jax.random.fold_in(KEY, 1), (5,))}}
+    q, s = compress_tree(tree, jax.random.fold_in(KEY, 2))
+    out = decompress_tree(q, s)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        rel = float(jnp.max(jnp.abs(a - b)) / (jnp.max(jnp.abs(a)) + 1e-9))
+        assert rel < 0.02          # int8: ~1/127 relative resolution
+    # payload really is int8
+    assert all(x.dtype == jnp.int8 for x in jax.tree.leaves(q))

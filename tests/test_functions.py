@@ -1,0 +1,74 @@
+"""Benchmark-function properties (§V testbed), incl. hypothesis sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.functions import FUNCTIONS, get, make_shifted_rosenbrock
+
+KNOWN_ZERO_AT_ZERO = ["ackley", "rastrigin", "griewank", "sphere", "weierstrass",
+                      "lnd1", "lnd2", "lnd6"]
+
+
+@pytest.mark.parametrize("name", KNOWN_ZERO_AT_ZERO)
+def test_optimum_at_origin(name):
+    f = get(name)
+    v = float(f.fn(jnp.zeros(32)))
+    assert abs(v) < 1e-3, (name, v)
+
+
+def test_rosenbrock_optimum():
+    assert abs(float(get("rosenbrock").fn(jnp.ones(64)))) < 1e-5
+
+
+def test_schwefel_optimum():
+    x = jnp.full((50,), 420.9687)
+    assert abs(float(get("schwefel").fn(x))) < 0.1
+
+
+def test_trid_2d_optimum():
+    # trid: known optimum f* = -d(d+4)(d-1)/6 at x_i = i(d+1-i)
+    d = 6
+    x = jnp.array([i * (d + 1 - i) for i in range(1, d + 1)], jnp.float32)
+    expected = -d * (d + 4) * (d - 1) / 6
+    assert abs(float(get("trid").fn(x)) - expected) < 1e-3
+
+
+def test_shifted_rosenbrock_bias():
+    f = make_shifted_rosenbrock(100)
+    from repro.functions import shift_vector
+    o = shift_vector(100)
+    assert abs(float(f.fn(o)) - 390.0) < 1e-3   # optimum at the shift, f* = 390
+
+
+@pytest.mark.parametrize("name", sorted(FUNCTIONS))
+def test_eval_population_matches_vmap(name):
+    f = FUNCTIONS[name]
+    pop = jax.random.uniform(jax.random.PRNGKey(0), (7, 12),
+                             minval=f.lo, maxval=f.hi)
+    batch = f.eval_population(pop)
+    single = jnp.stack([f.fn(pop[i]) for i in range(7)])
+    np.testing.assert_allclose(batch, single, rtol=2e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 64), st.integers(0, 2 ** 31 - 1))
+def test_all_functions_finite_in_domain(dim, seed):
+    key = jax.random.PRNGKey(seed)
+    for name, f in FUNCTIONS.items():
+        x = jax.random.uniform(key, (dim,), minval=f.lo, maxval=f.hi)
+        v = f.fn(x)
+        assert jnp.isfinite(v), name
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_sphere_shift_invariance(seed):
+    """f(x) >= f(0) = 0 and radial monotonicity on rays."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (16,))
+    f = FUNCTIONS["sphere"].fn
+    assert float(f(x)) >= 0.0
+    assert float(f(2.0 * x)) >= float(f(x))

@@ -1,0 +1,100 @@
+"""Per-kernel correctness: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _rand(shape, dtype=jnp.float32, k=0):
+    return jax.random.normal(jax.random.fold_in(KEY, k), shape, jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize("S,T,hd", [(128, 128, 64), (256, 256, 64),
+                                    (128, 256, 128), (100, 200, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes(S, T, hd, dtype):
+    BH = 2
+    q, k, v = _rand((BH, S, hd), dtype, 0), _rand((BH, T, hd), dtype, 1), _rand((BH, T, hd), dtype, 2)
+    out = ops.flash_attention(q, k, v, causal=True)
+    exp = ref.flash_attention_ref(q, k, v, causal=True)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    assert out.shape == (BH, S, hd)
+    assert jnp.max(jnp.abs(out.astype(jnp.float32) - exp.astype(jnp.float32))) < tol
+
+
+@pytest.mark.parametrize("window,softcap,causal", [(0, 0.0, True), (64, 0.0, True),
+                                                   (0, 50.0, True), (0, 0.0, False),
+                                                   (32, 30.0, True)])
+def test_flash_attention_masks(window, softcap, causal):
+    q, k, v = (_rand((2, 192, 64), k=i) for i in range(3))
+    out = ops.flash_attention(q, k, v, causal=causal, window=window, softcap=softcap)
+    exp = ref.flash_attention_ref(q, k, v, causal=causal, window=window, softcap=softcap)
+    assert jnp.max(jnp.abs(out - exp)) < 2e-6
+
+
+@pytest.mark.parametrize("S,P,N,chunk", [(128, 32, 16, 32), (256, 64, 64, 64),
+                                         (256, 64, 128, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan(S, P, N, chunk, dtype):
+    BH = 3
+    xh = _rand((BH, S, P), dtype, 0)
+    dt = jax.nn.softplus(_rand((BH, S), k=1))
+    A = -jnp.exp(_rand((BH,), k=2))
+    Bm, Cm = _rand((BH, S, N), dtype, 3), _rand((BH, S, N), dtype, 4)
+    out = ops.ssd_scan(xh, dt, A, Bm, Cm, chunk=chunk)
+    exp = ref.ssd_ref(xh, dt, A, Bm, Cm)
+    scale = float(jnp.max(jnp.abs(exp.astype(jnp.float32)))) + 1e-6
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    assert float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                 - exp.astype(jnp.float32)))) / scale < tol
+
+
+@pytest.mark.parametrize("fn", ["sphere", "rastrigin", "rosenbrock", "ackley"])
+@pytest.mark.parametrize("P,D", [(8, 64), (37, 100), (130, 1000)])
+def test_bench_eval(fn, P, D):
+    pop = jax.random.uniform(jax.random.fold_in(KEY, 5), (P, D),
+                             minval=-5.0, maxval=5.0)
+    out = ops.bench_eval(pop, fn)
+    exp = ref.bench_eval_ref(pop, fn)
+    rel = jnp.max(jnp.abs(out - exp) / (jnp.abs(exp) + 1.0))
+    assert rel < 1e-5
+
+
+def test_bench_eval_shifted():
+    pop = jax.random.uniform(KEY, (16, 100), minval=-100, maxval=100)
+    sh = jax.random.uniform(jax.random.fold_in(KEY, 6), (100,),
+                            minval=-80, maxval=80)
+    out = ops.bench_eval(pop, "shifted_rosenbrock", shift=sh, bias=390.0)
+    exp = ref.bench_eval_ref(pop, "shifted_rosenbrock", shift=sh, bias=390.0)
+    assert jnp.max(jnp.abs(out - exp) / (jnp.abs(exp) + 1.0)) < 1e-5
+
+
+@pytest.mark.parametrize("P,D", [(50, 100), (128, 1000), (99, 333)])
+def test_de_step(P, D):
+    pop = jax.random.uniform(KEY, (P, D), minval=-100, maxval=100)
+    fit = ref.bench_eval_ref(pop, "rastrigin")
+    i = jnp.arange(P)
+    idx = jnp.stack([(i + 3) % P, (i + 7) % P, (i + 11) % P])
+    u = jax.random.uniform(jax.random.fold_in(KEY, 9), (P, D))
+    jr = jax.random.randint(jax.random.fold_in(KEY, 10), (P,), 0, D)
+    a1, a2 = ops.de_step(pop, fit, idx, u, jr, fn="rastrigin")
+    b1, b2 = ref.de_step_ref(pop, fit, idx, u, jr, fn="rastrigin")
+    assert jnp.max(jnp.abs(a1 - b1)) < 1e-5
+    assert jnp.max(jnp.abs(a2 - b2) / (jnp.abs(b2) + 1.0)) < 1e-5
+
+
+def test_de_step_monotone():
+    """Selection invariant: fitness never gets worse."""
+    P, D = 64, 50
+    pop = jax.random.uniform(KEY, (P, D), minval=-100, maxval=100)
+    fit = ref.bench_eval_ref(pop, "sphere")
+    i = jnp.arange(P)
+    idx = jnp.stack([(i + 1) % P, (i + 5) % P, (i + 9) % P])
+    u = jax.random.uniform(jax.random.fold_in(KEY, 11), (P, D))
+    jr = jax.random.randint(jax.random.fold_in(KEY, 12), (P,), 0, D)
+    _, nf = ops.de_step(pop, fit, idx, u, jr, fn="sphere")
+    assert bool(jnp.all(nf <= fit + 1e-6))

@@ -1,0 +1,120 @@
+"""Island-engine + meta-heuristic behaviour tests (the paper's §IV semantics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ALGORITHMS, IslandConfig, IslandOptimizer
+from repro.core import migration
+from repro.functions import get
+
+KEY = jax.random.PRNGKey(3)
+SPHERE = get("sphere")
+
+
+@pytest.mark.parametrize("algo", sorted(ALGORITHMS))
+def test_improves_over_random(algo):
+    cfg = IslandConfig(n_islands=2, pop=24, dim=6, sync_every=5,
+                       max_evals=6000,
+                       migration="starvation" if algo in ("ga", "bh") else "ring")
+    res = IslandOptimizer(ALGORITHMS[algo], cfg).minimize(SPHERE, KEY)
+    # random uniform in [-100,100]^6 has E[f] = 6 * (200^2/12) = 20000
+    assert res.value < 5000, (algo, res.value)
+    assert res.n_evals <= cfg.max_evals
+    assert np.isfinite(res.value)
+
+
+def test_budget_respected():
+    for budget in (2000, 10_000):
+        cfg = IslandConfig(n_islands=1, pop=32, dim=4, migration="none",
+                           max_evals=budget)
+        res = IslandOptimizer(ALGORITHMS["de"], cfg).minimize(SPHERE, KEY)
+        assert res.n_evals <= budget
+
+
+def test_de_sync_deterministic():
+    cfg = IslandConfig(n_islands=2, pop=16, dim=4, max_evals=4000)
+    r1 = IslandOptimizer(ALGORITHMS["de"], cfg).minimize(SPHERE, KEY)
+    r2 = IslandOptimizer(ALGORITHMS["de"], cfg).minimize(SPHERE, KEY)
+    assert r1.value == r2.value                      # same seed, same result
+
+
+def test_de_chunked_mode_differs_but_works():
+    """The 'non-determinism-ok' flag changes the trajectory (stale reads) but
+    is itself reproducible in SPMD."""
+    cfg = IslandConfig(n_islands=1, pop=32, dim=6, migration="none",
+                       max_evals=8000)
+    rs = IslandOptimizer(ALGORITHMS["de"], cfg,
+                         params={"barrier_mode": "sync"}).minimize(SPHERE, KEY)
+    rc = IslandOptimizer(ALGORITHMS["de"], cfg,
+                         params={"barrier_mode": "chunked"}).minimize(SPHERE, KEY)
+    rc2 = IslandOptimizer(ALGORITHMS["de"], cfg,
+                          params={"barrier_mode": "chunked"}).minimize(SPHERE, KEY)
+    assert rc.value == rc2.value
+    assert np.isfinite(rs.value) and np.isfinite(rc.value)
+
+
+def test_best1bin_strategy():
+    cfg = IslandConfig(n_islands=1, pop=32, dim=6, migration="none",
+                       max_evals=8000)
+    r = IslandOptimizer(ALGORITHMS["de"], cfg,
+                        params={"strategy": "best1bin"}).minimize(SPHERE, KEY)
+    assert r.value < 100.0
+
+
+# --- migration unit semantics ------------------------------------------------
+
+def test_ring_migration_improves_receiver():
+    I, P, D = 4, 8, 3
+    pop = jax.random.uniform(KEY, (I, P, D), minval=-1, maxval=1)
+    fit = jnp.arange(I * P, dtype=jnp.float32).reshape(I, P)  # island0 best
+    new_pop, new_fit = migration.ring(pop, fit, k=2)
+    # every island's best fitness can only improve or stay
+    assert bool(jnp.all(new_fit.min(axis=1) <= fit.min(axis=1)))
+    # island 1 receives island 0's two best
+    assert float(new_fit[1].min()) <= float(fit[0].min())
+    assert new_pop.shape == pop.shape
+
+
+def test_ring_migration_conserves_capacity():
+    I, P, D = 3, 10, 4
+    pop = jax.random.uniform(KEY, (I, P, D))
+    fit = jax.random.uniform(jax.random.fold_in(KEY, 1), (I, P))
+    new_pop, new_fit = migration.ring(pop, fit, k=2)
+    assert new_pop.shape == (I, P, D) and new_fit.shape == (I, P)
+
+
+def test_starvation_routes_to_weakest():
+    I, P, D = 4, 6, 2
+    pop = jnp.zeros((I, P, D))
+    fit = jnp.full((I, P), 10.0)
+    alive = jnp.ones((I, P), bool)
+    # island 2 is starving: only 1 live member (others have inf slots)
+    fit = fit.at[2, 1:].set(jnp.inf)
+    alive = alive.at[2, 1:].set(False)
+    fit = fit.at[0, 0].set(1.0)                      # island 0 holds the best
+    pop = pop.at[0, 0].set(jnp.array([5.0, 5.0]))
+    new_pop, new_fit = migration.starvation(pop, fit, k=2, alive=alive)
+    assert float(new_fit[2].min()) == 1.0            # best migrated to host
+    assert bool(jnp.all(new_fit[1] == fit[1]))       # non-host islands untouched
+
+
+def test_no_migration_single_island():
+    pop = jax.random.uniform(KEY, (1, 8, 3))
+    fit = jax.random.uniform(jax.random.fold_in(KEY, 2), (1, 8))
+    p2, f2 = migration.ring(pop, fit, 2)
+    assert bool(jnp.all(p2 == pop)) and bool(jnp.all(f2 == fit))
+
+
+def test_incumbent_sharing():
+    cfg = IslandConfig(n_islands=4, pop=16, dim=4, sync_every=5,
+                       max_evals=4000, share_incumbent=True)
+    res = IslandOptimizer(ALGORITHMS["pso"], cfg).minimize(SPHERE, KEY)
+    assert np.isfinite(res.value)
+
+
+def test_history_monotone():
+    cfg = IslandConfig(n_islands=2, pop=16, dim=4, max_evals=6000)
+    res = IslandOptimizer(ALGORITHMS["de"], cfg).minimize(SPHERE, KEY)
+    hist = res.history
+    assert all(hist[i + 1] <= hist[i] + 1e-9 for i in range(len(hist) - 1))

@@ -1,0 +1,107 @@
+"""Per-arch smoke tests (reduced configs) + model-level consistency.
+
+Every assigned architecture instantiates a REDUCED same-family config and runs
+one forward + one train step on CPU, asserting output shapes and finiteness.
+The FULL configs are exercised only by launch/dryrun.py (no allocation).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.data import SyntheticStream
+from repro.launch.steps import make_train_step
+from repro.models import (ModelConfig, decode_step, forward,
+                          init_decode_state, init_params, loss_fn)
+from repro.optim import adam
+
+KEY = jax.random.PRNGKey(11)
+
+
+def _reduced(arch: str) -> ModelConfig:
+    return get_config(arch).reduced()
+
+
+def _batch(cfg: ModelConfig):
+    return next(iter(SyntheticStream(cfg)))
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke_forward_and_train_step(arch):
+    cfg = _reduced(arch)
+    params = init_params(KEY, cfg)
+    batch = {k: jnp.asarray(v) for k, v in _batch(cfg).items()}
+
+    logits, aux = jax.jit(lambda p: forward(p, cfg, tokens=batch.get("tokens"),
+                                            embeds=batch.get("embeds")))(params)
+    assert logits.shape == (cfg.global_batch, cfg.seq_len, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits))), arch
+
+    step = jax.jit(make_train_step(cfg, adam.AdamConfig(lr=1e-3)))
+    opt = adam.init(params)
+    p2, o2, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"])), arch
+    assert np.isfinite(float(metrics["grad_norm"])), arch
+    # params actually moved
+    delta = sum(float(jnp.sum(jnp.abs(a.astype(jnp.float32)
+                                      - b.astype(jnp.float32))))
+                for a, b in zip(jax.tree.leaves(p2), jax.tree.leaves(params)))
+    assert delta > 0.0, arch
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "mamba2-370m", "zamba2-7b",
+                                  "gemma2-9b"])
+def test_arch_decode_matches_forward(arch):
+    """Teacher-forced decode equals the parallel forward (cache correctness)."""
+    cfg = dataclasses.replace(_reduced(arch), remat=False)
+    params = init_params(KEY, cfg)
+    T = 8
+    toks = jax.random.randint(jax.random.fold_in(KEY, 1),
+                              (2, T), 0, cfg.vocab)
+    full, _ = forward(params, cfg, tokens=toks)
+    state = init_decode_state(cfg, 2, T)
+    dfn = jax.jit(lambda p, s, t: decode_step(p, cfg, s, tokens=t))
+    outs = []
+    for t in range(T):
+        lg, state = dfn(params, state, toks[:, t:t + 1])
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    err = float(jnp.max(jnp.abs(dec - full)))
+    scale = float(jnp.max(jnp.abs(full))) + 1e-6
+    assert err / scale < 5e-2, (arch, err, scale)
+
+
+def test_loss_decreases_reduced_llama():
+    cfg = _reduced("llama3.2-1b")
+    params = init_params(KEY, cfg)
+    opt = adam.init(params)
+    step = jax.jit(make_train_step(
+        cfg, adam.AdamConfig(lr=5e-3, warmup_steps=5, total_steps=100)))
+    stream = SyntheticStream(cfg)
+    losses = []
+    for _ in range(100):
+        batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.1, losses[::10]
+
+
+def test_moe_aux_loss_positive():
+    cfg = _reduced("qwen2-moe-a2.7b")
+    params = init_params(KEY, cfg)
+    batch = {k: jnp.asarray(v) for k, v in _batch(cfg).items()}
+    _, metrics = loss_fn(params, cfg, batch)
+    assert float(metrics["aux"]) > 0.0
+
+
+def test_vocab_padding_masked():
+    cfg = dataclasses.replace(_reduced("llama3.2-1b"), vocab=500, vocab_pad_to=256)
+    assert cfg.padded_vocab == 512
+    params = init_params(KEY, cfg)
+    toks = jnp.zeros((1, 8), jnp.int32)
+    logits, _ = forward(params, cfg, tokens=toks)
+    pad_logits = logits[..., cfg.vocab:]
+    assert bool(jnp.all(pad_logits < -1e8))

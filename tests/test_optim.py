@@ -1,0 +1,105 @@
+"""Gradient-based optimizer tests (popt4jlib.GradientDescent + Adam)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.functions import get
+from repro.optim import DescentConfig, adam, asd, avd, bfgs, fcg
+from repro.optim.numgrad import make_grad, richardson_grad
+
+KEY = jax.random.PRNGKey(5)
+SPHERE = get("sphere")
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 12), st.integers(0, 2 ** 31 - 1))
+def test_richardson_matches_autodiff(dim, seed):
+    f = SPHERE.fn
+    x = jax.random.uniform(jax.random.PRNGKey(seed), (dim,),
+                           minval=-5.0, maxval=5.0)
+    g_num, n = richardson_grad(f, x, h=1e-2)  # h sized for f32 cancellation
+    g_ad = jax.grad(f)(x)
+    assert n == 4 * dim
+    np.testing.assert_allclose(g_num, g_ad, rtol=5e-3, atol=5e-3)
+
+
+def test_richardson_eval_accounting():
+    grad_fn = make_grad(SPHERE.fn, "richardson")
+    _, n = grad_fn(jnp.zeros(7))
+    assert n == 28
+    grad_fn = make_grad(SPHERE.fn, "autodiff")
+    _, n = grad_fn(jnp.zeros(7))
+    assert n == 2
+
+
+@pytest.mark.parametrize("method,tol", [(asd, 1e-4), (fcg, 1e-4),
+                                        (bfgs, 1e-4), (avd, 1.0)])
+def test_descent_sphere(method, tol):
+    cfg = DescentConfig(max_evals=15_000)
+    res = method(SPHERE, KEY, 8, cfg)
+    assert res.value < tol
+    # budget check: an in-flight iteration may finish (AVD: one full sweep
+    # = dim * 2 * (2*expansions+1) evals; others: one gradient + line search)
+    assert res.n_evals <= cfg.max_evals + 8 * 2 * 17 + 50
+
+
+def test_fcg_rosenbrock_progress():
+    f = get("rosenbrock")
+    res = fcg(f, KEY, 8, DescentConfig(max_evals=30_000))
+    assert res.value < 1e4  # random point is ~1e9
+
+
+def test_avd_quantized():
+    cfg = DescentConfig(max_evals=5_000, avd_quantum=0.5)
+    res = avd(SPHERE, KEY, 4, cfg)
+    # every coordinate is a multiple of the quantum
+    q = np.asarray(res.arg) / 0.5
+    np.testing.assert_allclose(q, np.round(q), atol=1e-4)
+
+
+def test_adam_minimize():
+    res = adam.adam_minimize(SPHERE, KEY, 8, max_evals=30_000, lr=1.0)
+    assert res.value < 10.0
+
+
+def test_adam_pytree_matches_reference():
+    """One Adam step against the closed-form update."""
+    cfg = adam.AdamConfig(lr=0.1, b1=0.9, b2=0.999, eps=1e-8,
+                          grad_clip=0.0, warmup_steps=1, total_steps=10,
+                          min_lr_frac=1.0)
+    params = {"w": jnp.array([1.0, -2.0, 3.0])}
+    grads = {"w": jnp.array([0.1, -0.2, 0.3])}
+    st_ = adam.init(params)
+    new, st2 = adam.update(grads, st_, params, cfg)
+    g = np.array([0.1, -0.2, 0.3])
+    m = 0.1 * g
+    v = 0.001 * g * g
+    mh = m / (1 - 0.9)
+    vh = v / (1 - 0.999)
+    expect = np.array([1.0, -2.0, 3.0]) - 0.1 * mh / (np.sqrt(vh) + 1e-8)
+    np.testing.assert_allclose(new["w"], expect, rtol=1e-5)
+    assert int(st2.step) == 1
+
+
+def test_adam_grad_clip():
+    cfg = adam.AdamConfig(lr=0.1, grad_clip=1.0, warmup_steps=1,
+                          total_steps=10, min_lr_frac=1.0)
+    params = {"w": jnp.zeros(3)}
+    huge = {"w": jnp.array([1e6, 0.0, 0.0])}
+    st_ = adam.init(params)
+    new, _ = adam.update(huge, st_, params, cfg)
+    assert float(jnp.max(jnp.abs(new["w"]))) < 1.0  # clipped step is bounded
+
+
+def test_ga_fcg_combo_budget():
+    from repro.core import ALGORITHMS, IslandConfig, IslandOptimizer
+    from repro.core.coupling import with_fcg_postprocessing
+    meta = IslandOptimizer(ALGORITHMS["ga"],
+                           IslandConfig(n_islands=1, pop=16, dim=6,
+                                        migration="none"))
+    res = with_fcg_postprocessing(meta, SPHERE, KEY, 6, total_evals=10_000)
+    assert res.value < 100.0
+    assert res.n_evals <= 11_000

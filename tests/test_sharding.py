@@ -1,0 +1,110 @@
+"""Sharding-rule coherence: specs match parameter trees, all sharded dims
+divide on both production meshes, and the roofline HLO parser is exact on a
+crafted module. Pure spec-level — no 512-device mesh needed."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.configs.shapes import SHAPES, cell_supported, decode_state_specs as dspecs_shapes
+from repro.models.transformer import init_params
+from repro.optim import adam
+from repro.parallel import roofline as rl
+from repro.parallel.sharding import (batch_specs, compute_specs,
+                                     decode_state_specs, opt_state_specs,
+                                     param_specs)
+
+MESHES = {
+    "16x16": {"data": 16, "model": 16},
+    "2x16x16": {"pod": 2, "data": 16, "model": 16},
+}
+
+
+def _check_divisibility(shapes, specs, sizes, where=""):
+    flat_s, td1 = jax.tree_util.tree_flatten(shapes)
+    flat_p, td2 = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    assert td1.num_leaves == td2.num_leaves, f"{where}: tree mismatch"
+    for arr, spec in zip(flat_s, flat_p):
+        assert len(spec) <= arr.ndim, (where, arr.shape, spec)
+        for dim, part in zip(arr.shape, spec):
+            if part is None:
+                continue
+            n = 1
+            for ax in (part if isinstance(part, tuple) else (part,)):
+                n *= sizes[ax]
+            assert dim % n == 0, f"{where}: dim {dim} !% {n} ({spec})"
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("mesh_name", sorted(MESHES))
+def test_param_specs_divide(arch, mesh_name):
+    cfg = get_config(arch)
+    sizes = MESHES[mesh_name]
+    axes = tuple(sizes)
+    pshape = jax.eval_shape(lambda k: init_params(k, cfg),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    _check_divisibility(pshape, param_specs(cfg, axes), sizes, f"{arch} params")
+    c = compute_specs(cfg, axes)
+    if c is not None:
+        _check_divisibility(pshape, c, sizes, f"{arch} compute")
+    oshape = jax.eval_shape(adam.init, pshape)
+    _check_divisibility(oshape, opt_state_specs(cfg, axes), sizes,
+                        f"{arch} opt")
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("shape", sorted(SHAPES))
+def test_cell_specs_divide(arch, shape):
+    import dataclasses
+    cfg = get_config(arch)
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        pytest.skip(why)
+    sp = SHAPES[shape]
+    cfg = dataclasses.replace(cfg, seq_len=sp.seq_len,
+                              global_batch=sp.global_batch)
+    for mesh_name, sizes in MESHES.items():
+        axes = tuple(sizes)
+        if sp.kind == "decode":
+            sshape = dspecs_shapes(cfg, sp.global_batch, sp.seq_len)
+            _check_divisibility(
+                sshape, decode_state_specs(cfg, axes, sp.global_batch),
+                sizes, f"{arch}/{shape} state {mesh_name}")
+
+
+def test_roofline_parser_counts_loops():
+    hlo = """HloModule m, is_scheduled=true
+
+%body (p: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %p = (s32[], f32[128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[128]{0} get-tuple-element(%p), index=1
+  %ar = f32[128]{0} all-reduce(%x), replica_groups={}, to_apply=%add
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[128]) tuple(%ni, %ar)
+}
+
+%cond (p: (s32[], f32[128])) -> pred[] {
+  %p = (s32[], f32[128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[128]) -> f32[128] {
+  %a = f32[128]{0} parameter(0)
+  %ag = f32[256]{0} all-gather(%a), dimensions={0}
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[128]) tuple(%zero, %a)
+  %w = (s32[], f32[128]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[128]{0} get-tuple-element(%w), index=1
+}
+"""
+    st = rl.collective_bytes(hlo)
+    # all-gather 256*4 once + all-reduce 128*4 * 12 trips
+    assert st.by_kind["all-gather"] == 256 * 4
+    assert st.by_kind["all-reduce"] == 128 * 4 * 12
+    assert st.total_bytes == 256 * 4 + 128 * 4 * 12

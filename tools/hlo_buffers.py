@@ -1,0 +1,39 @@
+"""List the largest materialized buffers in an HLO dump (debug helper)."""
+import re
+import sys
+
+BP = {"f32": 4, "bf16": 2, "s32": 4, "pred": 1, "u32": 4, "f16": 2, "s64": 8}
+
+
+def main(path: str, min_mb: float = 256.0, top: int = 24) -> None:
+    sizes = []
+    for line in open(path):
+        m = re.match(r"\s*(?:ROOT )?%[\w\.\-]+ = ((?:\([^)]*\)|\S+)) ([\w\-\.]+)\(", line)
+        if not m:
+            continue
+        shape, op = m.group(1), m.group(2)
+        if op == "parameter":
+            continue
+        tot = 0
+        for dt, dims in re.findall(r"(\w+)\[([\d,]*)\]", shape):
+            if dt not in BP:
+                continue
+            n = 1
+            for d in (dims.split(",") if dims else []):
+                n *= int(d)
+            tot += n * BP[dt]
+        if tot >= min_mb * 2 ** 20:
+            sizes.append((tot, op, shape[:90]))
+    sizes.sort(reverse=True)
+    seen = set()
+    for t, op, shape in sizes:
+        if (op, shape) in seen:
+            continue
+        seen.add((op, shape))
+        print(f"{t/2**30:8.2f} GiB {op:24s} {shape}")
+        if len(seen) >= top:
+            break
+
+
+if __name__ == "__main__":
+    main(sys.argv[1], *(float(a) for a in sys.argv[2:3]))
