@@ -3,7 +3,8 @@
 
   table1_de_gen      §V.A DDE generation step (shifted Rosenbrock-1000, pop 800)
   fig4_lite          §V.B pairwise subset (5 methods x 5 functions, reduced dim)
-  executor_eval      distributed-evaluator throughput (the §III substrate)
+  executor_eval      distributed-evaluator throughput per backend (xla/pallas)
+  fused_de_island    device-resident DDE: XLA step vs fused de_step kernel
   de_kernel_parity   fused de_step kernel vs XLA reference (correctness +
                      relative call time; Pallas runs interpreted on CPU)
   roofline_summary   per-cell dominant terms from the saved dry-run artifacts
@@ -64,13 +65,33 @@ def fig4_lite() -> None:
 
 
 def executor_eval() -> None:
+    """Distributed-evaluator throughput per EvalBackend (xla vs pallas)."""
     from repro.core.executor import ExecutorConfig, make_batch_evaluator
     from repro.functions import get
-    ev = jax.jit(make_batch_evaluator(get("rastrigin"), ExecutorConfig()))
     pop = jax.random.uniform(jax.random.PRNGKey(0), (4096, 256),
                              minval=-5, maxval=5)
-    us = _t(lambda: ev(pop).block_until_ready())
-    print(f"executor_eval,{us:.1f},evals_per_s={4096/us*1e6:.0f}")
+    for backend in ("xla", "pallas"):
+        ev = jax.jit(make_batch_evaluator(get("rastrigin"),
+                                          ExecutorConfig(backend=backend)))
+        us = _t(lambda: ev(pop).block_until_ready())
+        print(f"executor_eval_{backend},{us:.1f},evals_per_s={4096/us*1e6:.0f}")
+
+
+def fused_de_island() -> None:
+    """DDE under the device-resident engine, XLA step vs fused de_step kernel."""
+    from repro.core import ALGORITHMS, IslandConfig, IslandOptimizer
+    from repro.functions import get
+    f = get("rastrigin")
+    cfg = IslandConfig(n_islands=1, pop=256, dim=128, migration="none",
+                       sync_every=10, max_evals=256 * 40)
+    for fused in (False, True):
+        opt = IslandOptimizer(ALGORITHMS["de"], cfg, params={"fused": fused})
+        opt.minimize(f, jax.random.PRNGKey(0))        # warm the jit cache
+        t0 = time.time()
+        res = opt.minimize(f, jax.random.PRNGKey(0))
+        per_gen = (time.time() - t0) / max(res.n_gens, 1) * 1e6
+        tag = "fused" if fused else "xla"
+        print(f"fused_de_island_{tag},{per_gen:.0f},best={res.value:.1f}")
 
 
 def de_kernel_parity() -> None:
@@ -110,8 +131,8 @@ def roofline_summary() -> None:
 
 def main() -> None:
     print("name,us_per_call,derived")
-    for fn in (table1_de_gen, fig4_lite, executor_eval, de_kernel_parity,
-               roofline_summary):
+    for fn in (table1_de_gen, fig4_lite, executor_eval, fused_de_island,
+               de_kernel_parity, roofline_summary):
         try:
             fn()
         except Exception as e:  # keep the harness running

@@ -5,7 +5,8 @@ island-model meta-heuristics and refine with conjugate gradient.
 """
 import jax
 
-from repro.core import ALGORITHMS, IslandConfig, IslandOptimizer, ObserverHub
+from repro.core import (ALGORITHMS, ExecutorConfig, IslandConfig,
+                        IslandOptimizer, ObserverHub)
 from repro.core.coupling import observed_local_search
 from repro.functions import get
 
@@ -22,7 +23,10 @@ observed_local_search(f, DIM, hub, budget_per_refine=2000)
 for name in ("de", "pso", "sa"):
     cfg = IslandConfig(n_islands=4, pop=32, dim=DIM, sync_every=10,
                        migration="ring", max_evals=40_000)
-    res = IslandOptimizer(ALGORITHMS[name], cfg).minimize(
+    # rastrigin has a fused-kernel entry in kernels.registry, so the whole run
+    # can use the Pallas evaluation backend (interpret mode off-TPU).
+    res = IslandOptimizer(ALGORITHMS[name], cfg,
+                          exec_cfg=ExecutorConfig(backend="pallas")).minimize(
         f, jax.random.fold_in(key, hash(name) % 1000))
     arg, val = hub.notify(res.arg, res.value)
     print(f"{name:4s} islands=4 best={res.value:10.4f} "

@@ -9,6 +9,12 @@ Java -> JAX mapping (see DESIGN.md §2):
       runs" race cannot exist — the config is immutable by construction.
   ObserverIntf/SubjectIntf              -> ObserverHub (host-side) + incumbent
       all-reduce at island sync rounds (device-side).
+  PDBatchTaskExecutor network           -> pluggable EvalBackend layer
+      (ExecutorConfig.backend = "xla" | "pallas" + kernels.registry; DESIGN.md §3)
+      composed with shard_map population sharding.
+
+Runs are device-resident by default: IslandOptimizer.minimize is one jitted
+lax.scan over sync rounds, results cross to the host once (DESIGN.md §4).
 """
 from __future__ import annotations
 

@@ -13,6 +13,13 @@ paper's "non-determinism-ok" flag:
                           threads racing on the shared solution array. One fewer
                           population snapshot per generation (cheaper on TPU: no
                           second all-gather when the population axis is sharded).
+
+``fused=True`` routes the whole generation — mutation, crossover, evaluation,
+selection — through the fused ``kernels.de_step`` Pallas kernel (one HBM read /
+write of the population instead of five round-trips) via the engine's
+``step_override`` hook. Requires DE/rand/1/bin and an objective registered in
+``kernels.registry``; runs in interpret mode off-TPU so the same path is
+exercised on CPU.
 """
 from __future__ import annotations
 
@@ -23,6 +30,8 @@ import jax.numpy as jnp
 
 from repro.core.islands import MetaHeuristic, State, clip_box, track_best, uniform_init
 from repro.functions.benchmarks import Function
+from repro.kernels import registry as kreg
+from repro.kernels.de_step import de_step as _de_step_kernel
 
 Array = jax.Array
 
@@ -61,6 +70,8 @@ def make(
     strategy: str = "rand1bin",        # rand1bin | best1bin
     barrier_mode: str = "sync",        # sync | chunked ("non-determinism-ok")
     n_chunks: int = 8,
+    fused: bool = False,               # whole generation in one Pallas kernel
+    interpret: bool | None = None,     # fused-kernel interpret mode; None = auto
 ) -> MetaHeuristic:
     assert strategy in ("rand1bin", "best1bin")
     assert barrier_mode in ("sync", "chunked")
@@ -106,5 +117,29 @@ def make(
         p, fit = jax.lax.fori_loop(0, n_eff_chunks, body, (state["pop"], state["fit"]))
         return track_best(state, p, fit)
 
+    step_override = None
+    if fused:
+        assert strategy == "rand1bin", "fused DE implements DE/rand/1/bin only"
+        spec = kreg.get_spec(f.name)   # KeyError if no kernel for this objective
+        assert spec.fused_de, f.name
+        interp = (jax.default_backend() != "tpu") if interpret is None else interpret
+
+        def gen_fused(state: State, key: Array) -> State:
+            # Same key discipline as gen_sync/_trials, so the fused and XLA
+            # paths draw identical donors/crossover masks on a fixed seed.
+            ksel, kcr, kj = jax.random.split(key, 3)
+            ra, rb, rc = _distinct3(ksel, pop)
+            u = jax.random.uniform(kcr, (pop, dim))
+            jrand = jax.random.randint(kj, (pop,), 0, dim)
+            new_pop, new_fit = _de_step_kernel(
+                state["pop"], state["fit"], jnp.stack([ra, rb, rc]), u, jrand,
+                fn=spec.eval_tag, shift=f.shift, bias=f.bias,
+                w=w, px=px, lo=lo, hi=hi, interpret=interp,
+            )
+            return track_best(state, new_pop, new_fit)
+
+        step_override = gen_fused
+
     gen = gen_sync if barrier_mode == "sync" else gen_chunked
-    return MetaHeuristic("de", init, gen, evals_per_gen=pop, init_evals=pop)
+    return MetaHeuristic("de", init, gen, evals_per_gen=pop, init_evals=pop,
+                         step_override=step_override)

@@ -13,9 +13,19 @@ re-submitting failed batches once. On a TPU mesh the worker pool is the mesh its
                             (the candidate is "evicted" from selection)
   * accumulator/reducer  -> the caller reduces with jnp/min-collectives
 
-The executor is a *pure function* of its inputs, so XLA can fuse it into the
-surrounding generation step — the distributed map/reduce costs nothing extra when
-the mesh is trivial (CPU tests) and lowers to balanced SPMD on the pod.
+The *evaluation backend* — how one chunk of candidates becomes fitness values —
+is pluggable (POLO-style policy/execution separation, DESIGN.md §3):
+
+  * ``xla``     vmap of the pure-jnp definition; works for every function.
+  * ``pallas``  dispatch to the fused ``bench_eval`` VMEM kernel for functions
+                with an entry in ``kernels.registry`` (interpret mode off-TPU,
+                so CPU tests exercise the same code path).
+
+Both compose with the shard_map wrapper: the mesh distributes chunks, the
+backend evaluates each chunk. The executor is a *pure function* of its inputs,
+so XLA can fuse it into the surrounding generation step — the distributed
+map/reduce costs nothing extra when the mesh is trivial (CPU tests) and lowers
+to balanced SPMD on the pod.
 """
 from __future__ import annotations
 
@@ -27,15 +37,43 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.functions.benchmarks import Function
+from repro.kernels import registry as kreg
+from repro.kernels.bench_eval import bench_eval as _bench_eval
 
 Array = jax.Array
+
+BACKENDS = ("xla", "pallas")
 
 
 @dataclasses.dataclass(frozen=True)
 class ExecutorConfig:
+    backend: str = "xla"          # evaluation backend: "xla" | "pallas"
     retry_bad: bool = True        # paper: resubmit a failed batch once
     retry_eps: float = 1e-6       # perturbation used for the retry evaluation
     mesh_axis: str | tuple[str, ...] | None = None  # population-sharding axis(es)
+    interpret: bool | None = None # pallas interpret mode; None = auto (off-TPU)
+
+
+def _pallas_interpret(cfg: ExecutorConfig) -> bool:
+    if cfg.interpret is not None:
+        return cfg.interpret
+    return jax.default_backend() != "tpu"
+
+
+def _make_eval_once(f: Function, cfg: ExecutorConfig) -> Callable[[Array], Array]:
+    """Resolve the per-chunk evaluation backend for ``f``."""
+    if cfg.backend == "xla":
+        return lambda pop: jax.vmap(f.fn)(pop)
+    if cfg.backend == "pallas":
+        spec = kreg.get_spec(f.name)   # KeyError for unregistered functions
+        interpret = _pallas_interpret(cfg)
+
+        def eval_pallas(pop: Array) -> Array:
+            return _bench_eval(pop, spec.eval_tag, shift=f.shift,
+                               bias=f.bias, interpret=interpret)
+
+        return eval_pallas
+    raise ValueError(f"unknown backend {cfg.backend!r}; expected one of {BACKENDS}")
 
 
 def make_batch_evaluator(
@@ -45,8 +83,7 @@ def make_batch_evaluator(
 ) -> Callable[[Array], Array]:
     """Return ``evaluate(pop: (P, D)) -> (P,)`` with the executor semantics above."""
 
-    def _eval_once(pop: Array) -> Array:
-        return jax.vmap(f.fn)(pop)
+    _eval_once = _make_eval_once(f, cfg)
 
     def evaluate(pop: Array) -> Array:
         fit = _eval_once(pop)

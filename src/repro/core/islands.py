@@ -8,7 +8,13 @@ generation and sharded over the mesh's (pod, data) axes; migration is an
 array roll/gather over that axis (lowers to collective-permute / all-gather);
 the incumbent all-reduce at each sync round realizes the Observer pattern
 between islands. One *sync round* = `sync_every` generations + migration +
-incumbent merge; rounds are host-level steps so the driver can checkpoint,
+incumbent merge.
+
+The engine is *device-resident* by default: the whole run is one jitted
+``lax.scan`` over sync rounds with donated state and an on-device
+``(n_rounds,)`` incumbent-history buffer, and results cross to the host
+exactly once at the end (DESIGN.md §4). Setting ``round_callback`` switches to
+the host-stepped loop — one jit call per round — so the driver can checkpoint,
 couple optimizers (ObserverHub), and survive restarts at round granularity.
 """
 from __future__ import annotations
@@ -19,6 +25,7 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import migration as mig
@@ -47,13 +54,20 @@ class IslandConfig:
 
 @dataclasses.dataclass(frozen=True)
 class MetaHeuristic:
-    """One meta-heuristic = per-island init + generation step + eval accounting."""
+    """One meta-heuristic = per-island init + generation step + eval accounting.
+
+    ``step_override`` replaces ``gen`` inside the engine's round loop when set —
+    the hook a fused whole-generation kernel (e.g. ``de.make(fused=True)``)
+    uses to bypass the pluggable evaluator while keeping init, migration,
+    incumbent sharing and budget accounting identical.
+    """
 
     name: str
     init: Callable[[Array], State]          # key -> single-island state
     gen: Callable[[State, Array], State]    # (state, key) -> state
     evals_per_gen: int
     init_evals: int
+    step_override: Callable[[State, Array], State] | None = None
 
 
 AlgoMaker = Callable[..., MetaHeuristic]
@@ -96,13 +110,14 @@ class IslandOptimizer:
     def _round_fn(self, algo: MetaHeuristic) -> Callable[[State, Array], State]:
         cfg = self.cfg
         stacked = cfg.n_islands > 1
+        step = algo.step_override if algo.step_override is not None else algo.gen
 
         def round_fn(state: State, key: Array) -> State:
             def one_gen(carry: State, k: Array) -> tuple[State, None]:
                 if stacked:
                     ks = jax.random.split(k, cfg.n_islands)
-                    return jax.vmap(algo.gen)(carry, ks), None
-                return algo.gen(carry, k), None
+                    return jax.vmap(step)(carry, ks), None
+                return step(carry, k), None
 
             gen_keys = jax.random.split(key, cfg.sync_every)
             state, _ = jax.lax.scan(one_gen, state, gen_keys)
@@ -126,6 +141,24 @@ class IslandOptimizer:
             return state
 
         return round_fn
+
+    def _run_fn(self, algo: MetaHeuristic) -> Callable[[State, Array], tuple[Array, Array, Array]]:
+        """Whole-run device program: scan over sync rounds, select the global
+        incumbent on device, return ``(best_arg, best_val, history)``."""
+        stacked = self.cfg.n_islands > 1
+        round_fn = self._round_fn(algo)
+
+        def run(state: State, round_keys: Array) -> tuple[Array, Array, Array]:
+            def body(carry: State, rk: Array) -> tuple[State, Array]:
+                carry = round_fn(carry, rk)
+                bv = carry["best_val"]
+                return carry, (jnp.min(bv) if stacked else bv)
+
+            state, history = jax.lax.scan(body, state, round_keys)
+            arg, val = _select_best(state, stacked)
+            return arg, val, history
+
+        return run
 
     def _shard_state(self, state: State) -> State:
         if self.mesh is None or self.cfg.n_islands <= 1:
@@ -152,31 +185,56 @@ class IslandOptimizer:
         else:
             state = algo.init(ik)
         state = self._shard_state(state)
+        round_keys = _chain_split(key, n_rounds)
 
         ctx = self.mesh if self.mesh is not None else _nullcontext()
-        round_jit = jax.jit(self._round_fn(algo), donate_argnums=0)
-        history = []
         with ctx:
-            for r in range(n_rounds):
-                key, rk = jax.random.split(key)
-                state = round_jit(state, rk)
-                bv = state["best_val"]
-                gval = jnp.min(bv) if cfg.n_islands > 1 else bv
-                history.append(float(gval))
-                if self.round_callback is not None:
+            if self.round_callback is None:
+                # Device-resident path: one jit, one host pull at the end.
+                run = jax.jit(self._run_fn(algo), donate_argnums=0)
+                arg, val, history = jax.device_get(run(state, round_keys))
+            else:
+                # Host-stepped path: round granularity for checkpoint/coupling.
+                round_jit = jax.jit(self._round_fn(algo), donate_argnums=0)
+                history = []
+                for r in range(n_rounds):
+                    state = round_jit(state, round_keys[r])
+                    bv = state["best_val"]
+                    gval = jnp.min(bv) if cfg.n_islands > 1 else bv
+                    history.append(float(gval))
                     self.round_callback(r, state["best_arg"], state["best_val"])
+                arg, val = _select_best(state, cfg.n_islands > 1)
+                history = np.asarray(history, dtype=np.float32)
 
-        bv = state["best_val"]
-        if cfg.n_islands > 1:
-            gi = int(jnp.argmin(bv))
-            arg, val = state["best_arg"][gi], float(bv[gi])
-        else:
-            arg, val = state["best_arg"], float(bv)
         n_evals = algo.init_evals * cfg.n_islands + n_rounds * per_round
         return OptimizeResult(
-            arg=arg, value=val, n_evals=n_evals,
+            arg=arg, value=float(val), n_evals=n_evals,
             n_gens=n_rounds * cfg.sync_every, history=history,
         )
+
+
+def _select_best(state: State, stacked: bool) -> tuple[Array, Array]:
+    """Global incumbent from (possibly island-stacked) engine state — the one
+    selection rule shared by the device-resident and host-stepped paths."""
+    bv = state["best_val"]
+    if stacked:
+        gi = jnp.argmin(bv)
+        return state["best_arg"][gi], bv[gi]
+    return state["best_arg"], bv
+
+
+@partial(jax.jit, static_argnums=1)
+def _chain_split(key: Array, n: int) -> Array:
+    """(n, 2) round keys from the sequential ``key, rk = split(key)`` chain —
+    the same stream the engine's original host round loop drew, so trajectories
+    are reproducible across the host-stepped and device-resident paths."""
+
+    def body(k: Array, _: None) -> tuple[Array, Array]:
+        ks = jax.random.split(k)
+        return ks[0], ks[1]
+
+    _, rks = jax.lax.scan(body, key, None, length=n)
+    return rks
 
 
 class _nullcontext:

@@ -35,6 +35,11 @@ class Function:
     hi: float
     f_star: float = 0.0  # known global optimum value (for reporting only)
     smooth: bool = True
+    # Kernel metadata: shifted/biased variants (CEC'2008) carry their offset so
+    # the executor's ``pallas`` backend can pass it to the fused kernel, whose
+    # registry entries implement only the canonical (unshifted) forms.
+    shift: Array | None = dataclasses.field(default=None, compare=False)
+    bias: float = 0.0
 
     def __call__(self, x: Array) -> Array:
         return self.fn(x)
@@ -95,6 +100,17 @@ def michalewicz(x: Array, m: int = 10) -> Array:
 
 def sphere(x: Array) -> Array:
     return jnp.sum(x * x, axis=-1)
+
+
+def levy(x: Array) -> Array:
+    w = 1.0 + (x - 1.0) / 4.0
+    wi = w[..., :-1]
+    t1 = jnp.sin(jnp.pi * w[..., 0]) ** 2
+    t2 = jnp.sum((wi - 1.0) ** 2 * (1.0 + 10.0 * jnp.sin(jnp.pi * wi + 1.0) ** 2),
+                 axis=-1)
+    wd = w[..., -1]
+    t3 = (wd - 1.0) ** 2 * (1.0 + jnp.sin(2.0 * jnp.pi * wd) ** 2)
+    return t1 + t2 + t3
 
 
 def weierstrass(x: Array, a: float = 0.5, b: float = 3.0, kmax: int = 20) -> Array:
@@ -186,7 +202,8 @@ def make_shifted_rosenbrock(dim: int, seed: int = 2008, bias: float = 390.0) -> 
         z = x - o.astype(x.dtype) + 1.0
         return rosenbrock(z) + jnp.asarray(bias, x.dtype)
 
-    return Function("shifted_rosenbrock", fn, -100.0, 100.0, f_star=bias)
+    return Function("shifted_rosenbrock", fn, -100.0, 100.0, f_star=bias,
+                    shift=o, bias=bias)
 
 
 # ---------------------------------------------------------------------------
@@ -203,6 +220,7 @@ FUNCTIONS: dict[str, Function] = {
     "trid": Function("trid", trid, -100.0, 100.0, f_star=float("-inf")),
     "michalewicz": Function("michalewicz", michalewicz, 0.0, jnp.pi, f_star=float("-inf")),
     "sphere": Function("sphere", sphere, -100.0, 100.0),
+    "levy": Function("levy", levy, -10.0, 10.0),
     "weierstrass": Function("weierstrass", weierstrass, -0.5, 0.5),
     "lnd1": Function("lnd1", lnd1_maxq, -10.0, 10.0, smooth=False),
     "lnd2": Function("lnd2", lnd2_mxhilb, -10.0, 10.0, smooth=False),

@@ -1,2 +1,3 @@
-from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels import ops, ref, registry  # noqa: F401
 from repro.kernels.ops import bench_eval, de_step, flash_attention, ssd_scan  # noqa: F401
+from repro.kernels.registry import KernelSpec, get_spec  # noqa: F401

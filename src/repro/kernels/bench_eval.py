@@ -3,8 +3,9 @@
 The paper's hot loop: every meta-heuristic spends its 1M-evaluation budget in
 ``f(pop)`` (Fig. 4 protocol). This kernel evaluates a (pop_block, dim) tile per
 grid step entirely in VMEM — one HBM read of the population, no intermediate
-arrays — for the §V testbed functions (sphere / rastrigin / rosenbrock /
-ackley, incl. the CEC'2008 shifted Rosenbrock via a shift operand).
+arrays — for the §V testbed functions listed in ``kernels.registry`` (sphere /
+rastrigin / rosenbrock / ackley / griewank / schwefel / levy / dropwave /
+michalewicz, incl. the CEC'2008 shifted Rosenbrock via a shift operand).
 
 dim is carried whole per tile (the paper's 1000-D padded to 1024 lane-aligned);
 pop_block=8 rows x 1024 dims x 4B = 32 KB live VMEM.
@@ -17,7 +18,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-SUPPORTED = ("sphere", "rastrigin", "rosenbrock", "ackley", "shifted_rosenbrock")
+# Objective bodies _eval_tile implements. ``kernels.registry`` maps function
+# *names* to one of these tags (several names may share a tag); this tuple is
+# the ground truth for what the kernel itself can evaluate.
+EVAL_TAGS = (
+    "sphere", "rastrigin", "rosenbrock", "ackley", "shifted_rosenbrock",
+    "griewank", "schwefel", "levy", "dropwave", "michalewicz",
+)
 
 
 def _eval_tile(x: jax.Array, fn: str, dim: int, bias: float) -> jax.Array:
@@ -43,6 +50,36 @@ def _eval_tile(x: jax.Array, fn: str, dim: int, bias: float) -> jax.Array:
         s2 = jnp.where(valid, jnp.cos(2.0 * jnp.pi * x), 0.0).sum(axis=1) / dim
         return (-20.0 * jnp.exp(-0.2 * jnp.sqrt(s1)) - jnp.exp(s2)
                 + 20.0 + jnp.e + bias)
+    if fn == "griewank":
+        s = jnp.where(valid, x * x, 0.0).sum(axis=1) / 4000.0
+        i = jnp.sqrt((lane + 1).astype(jnp.float32))
+        p = jnp.where(valid, jnp.cos(x / i), 1.0).prod(axis=1)
+        return s - p + 1.0 + bias
+    if fn == "schwefel":
+        t = jnp.where(valid, x * jnp.sin(jnp.sqrt(jnp.abs(x))), 0.0)
+        return 418.9829 * dim - t.sum(axis=1) + bias
+    if fn == "levy":
+        w = 1.0 + (x - 1.0) / 4.0
+        first = lane == 0
+        mid = lane < (dim - 1)
+        last = lane == (dim - 1)
+        t1 = jnp.where(first, jnp.sin(jnp.pi * w) ** 2, 0.0).sum(axis=1)
+        t2 = jnp.where(
+            mid,
+            (w - 1.0) ** 2 * (1.0 + 10.0 * jnp.sin(jnp.pi * w + 1.0) ** 2),
+            0.0,
+        ).sum(axis=1)
+        t3 = jnp.where(
+            last, (w - 1.0) ** 2 * (1.0 + jnp.sin(2.0 * jnp.pi * w) ** 2), 0.0
+        ).sum(axis=1)
+        return t1 + t2 + t3 + bias
+    if fn == "dropwave":
+        s = jnp.where(valid, x * x, 0.0).sum(axis=1)
+        return -(1.0 + jnp.cos(12.0 * jnp.sqrt(s))) / (0.5 * s + 2.0) + bias
+    if fn == "michalewicz":
+        i = (lane + 1).astype(jnp.float32)
+        t = jnp.sin(x) * jnp.sin(i * x * x / jnp.pi) ** 20
+        return -jnp.where(valid, t, 0.0).sum(axis=1) + bias
     raise ValueError(fn)
 
 
@@ -55,7 +92,10 @@ def bench_eval(pop: jax.Array, fn: str, shift: jax.Array | None = None,
                bias: float = 0.0, pop_block: int = 8, *,
                interpret: bool = False) -> jax.Array:
     """pop: (P, D) f32 -> fitness (P,). ``shift``: (D,) offset (CEC'2008)."""
-    assert fn in SUPPORTED, fn
+    if fn not in EVAL_TAGS:
+        raise ValueError(
+            f"no kernel body for eval tag {fn!r}; implemented: {EVAL_TAGS} "
+            f"(kernels.registry maps function names to these tags)")
     P, D = pop.shape
     Dp = (D + 127) // 128 * 128
     Pp = (P + pop_block - 1) // pop_block * pop_block

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.bench_eval import SUPPORTED, _eval_tile
+from repro.kernels.bench_eval import EVAL_TAGS, _eval_tile
 
 
 def _kernel(pop_ref, fit_ref, pa_ref, pb_ref, pc_ref, u_ref, jr_ref, shift_ref,
@@ -57,7 +57,7 @@ def de_step(pop: jax.Array, fit: jax.Array, idx_abc: jax.Array, u: jax.Array,
 
     pop (P, D) f32; fit (P,); idx_abc (3, P) i32 donor indices; u (P, D)
     uniforms; jrand (P,) i32. Returns (new_pop, new_fit)."""
-    assert fn in SUPPORTED
+    assert fn in EVAL_TAGS, fn  # fused_de gating happens at de.make (by name)
     P, D = pop.shape
     Dp = (D + 127) // 128 * 128
     Pp = (P + pop_block - 1) // pop_block * pop_block

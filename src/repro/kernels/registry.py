@@ -1,0 +1,73 @@
+"""Per-function kernel registry.
+
+Maps benchmark-function names (keys of ``functions.benchmarks.FUNCTIONS`` plus
+``shifted_rosenbrock``) to the fused-kernel specs that can evaluate them.  This
+replaces the old ad-hoc ``SUPPORTED`` tuple in ``bench_eval.py``: the executor's
+``pallas`` backend and the fused DE step both consult this table, so adding a
+kernel implementation for a new testbed function is one ``register()`` call.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """How the Pallas layer evaluates one benchmark function.
+
+    ``eval_tag`` is the branch selector inside ``bench_eval._eval_tile``; it is
+    usually the function name itself but kept separate so several registered
+    names can share one kernel body (e.g. shifted variants).  ``fused_de``
+    marks the objective as usable inside the fused DE generation kernel (all
+    current tags are — the DE kernel reuses ``_eval_tile`` directly).
+    """
+
+    name: str
+    eval_tag: str
+    fused_de: bool = True
+
+
+_REGISTRY: dict[str, KernelSpec] = {}
+
+
+def register(spec: KernelSpec) -> KernelSpec:
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def supported(name: str) -> bool:
+    return name in _REGISTRY
+
+
+def registered() -> tuple[str, ...]:
+    """Names with a kernel implementation, in registration order."""
+    return tuple(_REGISTRY)
+
+
+def get_spec(name: str) -> KernelSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"no Pallas kernel registered for function {name!r}; "
+            f"registered: {sorted(_REGISTRY)} "
+            f"(use ExecutorConfig(backend='xla') for unregistered functions)"
+        ) from None
+
+
+# The §V.B testbed coverage.  weierstrass is deliberately absent: its b^k
+# arguments (3^20 ~ 3.5e9) exceed f32 argument-reduction precision, so a
+# reordered kernel summation cannot hold a meaningful parity bound.
+for _name in (
+    "sphere",
+    "rastrigin",
+    "rosenbrock",
+    "ackley",
+    "shifted_rosenbrock",
+    "griewank",
+    "schwefel",
+    "levy",
+    "dropwave",
+    "michalewicz",
+):
+    register(KernelSpec(name=_name, eval_tag=_name))

@@ -154,6 +154,29 @@ def _maybe_remat(fn, cfg: ModelConfig):
     return jax.checkpoint(fn) if cfg.remat else fn
 
 
+@jax.custom_vjp
+def _grad_safe_barrier(x: Array) -> Array:
+    """``lax.optimization_barrier`` with a differentiation rule (identity VJP).
+
+    The raw primitive has no JVP/VJP, so applying it inside a scanned layer
+    block breaks ``grad``; this wrapper keeps the barrier on both the forward
+    activations and the backward cotangents (the remat stash it protects is
+    re-materialized in the backward loop too).
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+def _gsb_fwd(x: Array) -> tuple[Array, None]:
+    return jax.lax.optimization_barrier(x), None
+
+
+def _gsb_bwd(_, g: Array) -> tuple[Array]:
+    return (jax.lax.optimization_barrier(g),)
+
+
+_grad_safe_barrier.defvjp(_gsb_fwd, _gsb_bwd)
+
+
 def _scan_layer_blocks(x: Array, layers: Params, idxs: Array,
                        block_fn, cfg: ModelConfig) -> tuple[Array, Array]:
     """scan over layers in checkpoint groups of ``remat_group``: one residual
@@ -181,7 +204,7 @@ def _scan_layer_blocks(x: Array, layers: Params, idxs: Array,
         lp_g, idx_g = inp
         # barrier: discourage XLA from hoisting upcasts of the remat stash out
         # of the backward loop (a 2x f32 copy of every saved layer input)
-        x = jax.lax.optimization_barrier(x)
+        x = _grad_safe_barrier(x)
         for j in range(G):
             lp = jax.tree.map(lambda v: v[j], lp_g)
             lp = ctx.constrain_layer_weights(lp)

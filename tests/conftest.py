@@ -4,6 +4,10 @@ import pytest
 # NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests and
 # benches must see the real single device; only launch/dryrun.py fakes 512.
 
+# Optional dev-only deps (requirements-dev.txt). Modules that need hypothesis
+# guard themselves with ``pytest.importorskip("hypothesis")`` at import time so
+# a container without dev requirements sees skips, not collection errors.
+
 
 @pytest.fixture(scope="session")
 def rng():

@@ -1,0 +1,164 @@
+"""EvalBackend layer + device-resident engine tests (ISSUE 1 acceptance).
+
+Covers: XLA-vs-Pallas(interpret) fitness parity for every registered kernel,
+device-resident vs host-stepped engine equivalence on a fixed seed, the
+single-host-transfer property of the device-resident path, and the fused-DE
+``step_override`` regression.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ALGORITHMS, ExecutorConfig, IslandConfig, IslandOptimizer, de
+from repro.core.executor import make_batch_evaluator
+from repro.functions import get, make_shifted_rosenbrock
+from repro.kernels import registry
+
+KEY = jax.random.PRNGKey(11)
+SPHERE = get("sphere")
+
+
+def _fn(name, dim):
+    return make_shifted_rosenbrock(dim) if name == "shifted_rosenbrock" else get(name)
+
+
+# --- backend parity ----------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(registry.registered()))
+def test_xla_vs_pallas_parity(name):
+    dim, P = 24, 65                       # deliberately unaligned shapes
+    f = _fn(name, dim)
+    pop = jax.random.uniform(jax.random.fold_in(KEY, hash(name) % 997), (P, dim),
+                             minval=f.lo, maxval=f.hi)
+    fx = make_batch_evaluator(f, ExecutorConfig(backend="xla"))(pop)
+    fp = make_batch_evaluator(f, ExecutorConfig(backend="pallas"))(pop)
+    rel = float(jnp.max(jnp.abs(fx - fp) / (jnp.abs(fx) + 1.0)))
+    assert rel <= 1e-4, (name, rel)
+
+
+def test_pallas_backend_unregistered_function_raises():
+    with pytest.raises(KeyError, match="weierstrass"):
+        make_batch_evaluator(get("weierstrass"), ExecutorConfig(backend="pallas"))
+
+
+def test_unknown_backend_raises():
+    with pytest.raises(ValueError, match="unknown backend"):
+        make_batch_evaluator(SPHERE, ExecutorConfig(backend="cuda"))
+
+
+def test_pallas_backend_retry_semantics():
+    """The resubmit-once/evict policy is backend-independent: the pallas path
+    keeps finite fitness finite and shapes intact."""
+    f = get("rastrigin")
+    ev = make_batch_evaluator(f, ExecutorConfig(backend="pallas", retry_bad=True))
+    pop = jax.random.uniform(KEY, (13, 8), minval=f.lo, maxval=f.hi)
+    fit = ev(pop)
+    assert fit.shape == (13,) and bool(jnp.all(jnp.isfinite(fit)))
+
+
+def test_pallas_backend_under_island_engine():
+    cfg = IslandConfig(n_islands=2, pop=16, dim=8, sync_every=5, max_evals=4000)
+    res = IslandOptimizer(ALGORITHMS["de"], cfg,
+                          exec_cfg=ExecutorConfig(backend="pallas")
+                          ).minimize(get("rastrigin"), KEY)
+    assert np.isfinite(res.value)
+    assert res.value < 10.0 * 8 * 2      # far below random-uniform expectation
+
+
+# --- device-resident engine --------------------------------------------------
+
+def test_device_resident_matches_host_stepped():
+    """Same seed -> the single-scan device program and the per-round host loop
+    produce the same incumbent trace and final value."""
+    cfg = IslandConfig(n_islands=2, pop=16, dim=4, sync_every=5, max_evals=4000)
+    r_dev = IslandOptimizer(ALGORITHMS["de"], cfg).minimize(SPHERE, KEY)
+    rounds = []
+    r_host = IslandOptimizer(
+        ALGORITHMS["de"], cfg,
+        round_callback=lambda r, a, v: rounds.append(r),
+    ).minimize(SPHERE, KEY)
+    assert len(rounds) == len(r_host.history) == len(np.asarray(r_dev.history))
+    np.testing.assert_allclose(np.asarray(r_dev.history),
+                               np.asarray(r_host.history), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(r_dev.value, r_host.value, rtol=1e-5, atol=1e-5)
+
+
+def test_device_resident_single_host_transfer(monkeypatch):
+    """No round_callback -> results cross host<->device exactly once."""
+    pulls = {"n": 0}
+    real = jax.device_get
+
+    def counting(x):
+        pulls["n"] += 1
+        return real(x)
+
+    monkeypatch.setattr(jax, "device_get", counting)
+    cfg = IslandConfig(n_islands=2, pop=16, dim=4, sync_every=5, max_evals=4000)
+    res = IslandOptimizer(ALGORITHMS["de"], cfg).minimize(SPHERE, KEY)
+    assert pulls["n"] == 1
+    assert np.isfinite(res.value) and len(res.history) > 1
+
+
+def test_device_resident_history_on_device_buffer():
+    cfg = IslandConfig(n_islands=1, pop=16, dim=4, migration="none",
+                       max_evals=3200)
+    res = IslandOptimizer(ALGORITHMS["de"], cfg).minimize(SPHERE, KEY)
+    hist = np.asarray(res.history)
+    n_rounds = (cfg.max_evals - 16) // (16 * cfg.sync_every)
+    assert hist.shape == (n_rounds,)
+    assert np.all(hist[1:] <= hist[:-1] + 1e-9)
+
+
+# --- fused DE (step_override) ------------------------------------------------
+
+def test_fused_de_one_generation_matches_xla():
+    f = get("sphere")
+    pop, dim = 24, 16
+    ev = make_batch_evaluator(f, ExecutorConfig())
+    plain = de.make(f=f, evaluator=ev, pop=pop, dim=dim)
+    fused = de.make(f=f, evaluator=ev, pop=pop, dim=dim, fused=True)
+    assert fused.step_override is not None and plain.step_override is None
+    state = plain.init(jax.random.fold_in(KEY, 1))
+    gk = jax.random.fold_in(KEY, 2)
+    s_plain = plain.gen(dict(state), gk)
+    s_fused = fused.step_override(dict(state), gk)
+    np.testing.assert_allclose(s_plain["fit"], s_fused["fit"], rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(s_plain["pop"], s_fused["pop"], rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(s_plain["best_val"], s_fused["best_val"],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_de_runs_under_island_engine():
+    """`de.make(..., fused=True)` under the engine on CPU (interpret mode)."""
+    f = get("rastrigin")
+    cfg = IslandConfig(n_islands=2, pop=24, dim=8, sync_every=5, max_evals=6000)
+    r1 = IslandOptimizer(ALGORITHMS["de"], cfg, params={"fused": True}).minimize(f, KEY)
+    r2 = IslandOptimizer(ALGORITHMS["de"], cfg, params={"fused": True}).minimize(f, KEY)
+    assert r1.value == r2.value          # deterministic
+    assert np.isfinite(r1.value)
+    hist = np.asarray(r1.history)
+    assert np.all(hist[1:] <= hist[:-1] + 1e-9)
+    assert r1.value < 10.0 * 8 * 2
+
+
+def test_fused_de_shifted_rosenbrock():
+    """Fused path honors the CEC'2008 shift/bias carried on the Function."""
+    f = make_shifted_rosenbrock(16)
+    cfg = IslandConfig(n_islands=1, pop=32, dim=16, migration="none",
+                       max_evals=20_000)
+    res = IslandOptimizer(ALGORITHMS["de"], cfg,
+                          params={"w": 0.5, "px": 0.2, "fused": True}).minimize(f, KEY)
+    assert res.value >= 390.0 - 1e-3     # f* = 390 — bias must be applied
+    assert res.value < 1e7
+
+
+def test_fused_de_rejects_best1bin_and_unregistered():
+    ev = make_batch_evaluator(SPHERE, ExecutorConfig())
+    with pytest.raises(AssertionError):
+        de.make(f=SPHERE, evaluator=ev, pop=8, dim=4, fused=True,
+                strategy="best1bin")
+    wf = get("weierstrass")
+    with pytest.raises(KeyError):
+        de.make(f=wf, evaluator=make_batch_evaluator(wf, ExecutorConfig()),
+                pop=8, dim=4, fused=True)
