@@ -1,0 +1,110 @@
+"""Scheduler throughput: jobs/sec through the shape-bucketed scheduler vs
+naive sequential ``IslandOptimizer.minimize`` calls, for one bucket of
+same-shaped jobs. Writes ``BENCH_scheduler.json`` (the repo's perf
+trajectory artifact; CI uploads the --smoke variant).
+
+    PYTHONPATH=src python benchmarks/throughput.py            # full
+    PYTHONPATH=src python benchmarks/throughput.py --smoke    # CI-sized
+
+The sequential baseline is what a client without the service would do: one
+optimizer per request, one dispatch (and one XLA compile) per job. The
+scheduler packs all jobs into a single jitted jobs-axis run, so N jobs cost
+one compile + one dispatch; a second, warm flush isolates steady-state
+dispatch throughput from compile amortization. Both paths draw the same
+per-seed key chain, so the benchmark also asserts bit-identical results.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.core import (ALGORITHMS, IslandConfig, IslandOptimizer, OptRequest,
+                        ShapeBucketScheduler)
+from repro.functions import get
+
+
+def bench(n_jobs: int, fn: str, algo: str, dim: int, pop: int, n_islands: int,
+          max_evals: int) -> dict:
+    f = get(fn, dim)
+    mk = lambda seed: OptRequest(fn=fn, algo=algo, dim=dim, pop=pop,
+                                 n_islands=n_islands, max_evals=max_evals,
+                                 migration="ring", seed=seed)
+
+    # -- naive sequential: fresh optimizer + dispatch per request ----------
+    t0 = time.perf_counter()
+    seq = []
+    for s in range(n_jobs):
+        cfg = IslandConfig(n_islands=n_islands, pop=pop, dim=dim,
+                           migration="ring", max_evals=max_evals)
+        opt = IslandOptimizer(ALGORITHMS[algo], cfg)
+        seq.append(opt.minimize(f, jax.random.PRNGKey(s)))
+    t_seq = time.perf_counter() - t0
+
+    # -- scheduler: one bucket, one dispatch (cold: includes compile) ------
+    sched = ShapeBucketScheduler()
+    ids = [sched.submit(mk(s)) for s in range(n_jobs)]
+    t0 = time.perf_counter()
+    sched.flush()
+    batched = [sched.result(i).result for i in ids]
+    t_cold = time.perf_counter() - t0
+
+    # -- warm flush: same bucket, fresh seeds, compiled program reused -----
+    ids2 = [sched.submit(mk(s + n_jobs)) for s in range(n_jobs)]
+    t0 = time.perf_counter()
+    sched.flush()
+    for i in ids2:
+        sched.result(i)
+    t_warm = time.perf_counter() - t0
+
+    identical = all(b.value == s.value and b.n_evals == s.n_evals
+                    for b, s in zip(batched, seq))
+    return {
+        "n_jobs": n_jobs, "fn": fn, "algo": algo, "dim": dim, "pop": pop,
+        "n_islands": n_islands, "max_evals": max_evals,
+        "backend": jax.default_backend(),
+        "t_sequential_s": round(t_seq, 4),
+        "t_scheduler_s": round(t_cold, 4),
+        "t_scheduler_warm_s": round(t_warm, 4),
+        "jobs_per_s_sequential": round(n_jobs / t_seq, 3),
+        "jobs_per_s_scheduler": round(n_jobs / t_cold, 3),
+        "jobs_per_s_scheduler_warm": round(n_jobs / t_warm, 3),
+        "speedup": round(t_seq / t_cold, 3),
+        "speedup_warm": round(t_seq / t_warm, 3),
+        "bit_identical_to_sequential": identical,
+        "dispatches": sched.n_dispatches,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized problem (same 16-job bucket, tiny budget)")
+    ap.add_argument("--jobs", type=int, default=16)
+    ap.add_argument("--fn", default="rastrigin")
+    ap.add_argument("--algo", default="de")
+    ap.add_argument("--dim", type=int, default=16)
+    ap.add_argument("--pop", type=int, default=64)
+    ap.add_argument("--islands", type=int, default=4)
+    ap.add_argument("--evals", type=int, default=40_000)
+    ap.add_argument("--out", default="BENCH_scheduler.json")
+    args = ap.parse_args()
+
+    if args.smoke:
+        args.dim, args.pop, args.islands, args.evals = 8, 32, 2, 4_000
+
+    rec = bench(args.jobs, args.fn, args.algo, args.dim, args.pop,
+                args.islands, args.evals)
+    rec["smoke"] = args.smoke
+    with open(args.out, "w") as fh:
+        json.dump(rec, fh, indent=2)
+        fh.write("\n")
+    print(json.dumps(rec, indent=2))
+    if not rec["bit_identical_to_sequential"]:
+        raise SystemExit("scheduler results diverged from sequential runs")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,8 +1,10 @@
 """popt4jax core — the paper's contribution as composable JAX modules."""
 from repro.core import bh, de, ea, fa, ga, mc, pso, sa  # noqa: F401
-from repro.core.api import ObserverHub, OptimizeResult, Optimizer  # noqa: F401
+from repro.core.api import (  # noqa: F401
+    ObserverHub, OptimizeResult, Optimizer, OptRequest, OptResponse)
 from repro.core.executor import ExecutorConfig, make_batch_evaluator  # noqa: F401
 from repro.core.islands import IslandConfig, IslandOptimizer, MetaHeuristic  # noqa: F401
+from repro.core.scheduler import ShapeBucketScheduler  # noqa: F401
 
 ALGORITHMS = {
     "de": de.make,

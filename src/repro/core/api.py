@@ -12,6 +12,9 @@ Java -> JAX mapping (see DESIGN.md §2):
   PDBatchTaskExecutor network           -> pluggable EvalBackend layer
       (ExecutorConfig.backend = "xla" | "pallas" + kernels.registry; DESIGN.md §3)
       composed with shard_map population sharding.
+  PDBTExecSingleCltWrkInitSrv server    -> OptRequest/OptResponse +
+      core.scheduler.ShapeBucketScheduler + launch.opt_serve (DESIGN.md §5):
+      many concurrent jobs packed into one jitted run per shape-class.
 
 Runs are device-resident by default: IslandOptimizer.minimize is one jitted
 lax.scan over sync rounds, results cross to the host once (DESIGN.md §4).
@@ -44,6 +47,89 @@ class Optimizer(Protocol):
     """popt4jlib ``OptimizerIntf``."""
 
     def minimize(self, f: Function, key: Array) -> OptimizeResult: ...
+
+
+# ---------------------------------------------------------------------------
+# Multi-job service types — the popt4jlib ``PDBTExecSingleCltWrkInitSrv``
+# client protocol as data (DESIGN.md §5). A client submits OptRequests; the
+# scheduler buckets them by compiled shape-class and packs each bucket into a
+# single jitted run with a leading jobs axis.
+# ---------------------------------------------------------------------------
+
+SHAPE_CLASS_FIELDS = (
+    "fn", "algo", "dim", "pop", "n_islands", "sync_every", "migration",
+    "n_migrants", "share_incumbent", "max_evals", "backend", "params",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class OptRequest:
+    """One optimization job — the JAX analogue of a Java ``TaskObject`` batch
+    submitted to ``PDBatchTaskExecutorSrv``.
+
+    Every field except ``seed`` participates in the compiled shape-class
+    (:meth:`shape_class`): two requests that differ only by seed share one
+    XLA program and run as rows of the same jobs axis.
+    """
+
+    fn: str                         # objective name in functions.FUNCTIONS
+    algo: str = "de"                # key into core.ALGORITHMS
+    dim: int = 10
+    max_evals: int = 10_000         # Fig. 4 budget unit
+    seed: int = 0
+    pop: int = 64
+    n_islands: int = 1
+    sync_every: int = 10
+    migration: str = "ring"
+    n_migrants: int = 2
+    share_incumbent: bool = False
+    backend: str = "xla"            # ExecutorConfig.backend
+    params: tuple[tuple[str, Any], ...] = ()  # extra algo kwargs, hashable
+
+    def shape_class(self) -> tuple:
+        """Bucket key: everything that feeds the compiled program's shape or
+        its closed-over constants — i.e. everything but the seed."""
+        return tuple(getattr(self, n) for n in SHAPE_CLASS_FIELDS)
+
+    @classmethod
+    def from_dict(cls, d: dict[str, Any]) -> "OptRequest":
+        d = dict(d)
+        params = d.pop("params", ())
+        if isinstance(params, dict):
+            params = tuple(sorted(params.items()))
+        else:
+            # JSON delivers pairs as lists; re-tuple so the request stays
+            # hashable (shape_class is a dict key in the scheduler).
+            params = tuple(tuple(p) for p in params)
+        names = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - names
+        if unknown:
+            raise ValueError(f"unknown OptRequest fields: {sorted(unknown)}")
+        return cls(params=params, **d)
+
+
+@dataclasses.dataclass
+class OptResponse:
+    """Job envelope the service hands back on poll/result: lifecycle status
+    plus the ``OptimizeResult`` payload once the job's bucket has run."""
+
+    job_id: str
+    status: str = "queued"          # queued | running | done | error
+    result: OptimizeResult | None = None
+    error: str | None = None
+
+    def to_dict(self) -> dict[str, Any]:
+        out: dict[str, Any] = {"id": self.job_id, "status": self.status}
+        if self.error is not None:
+            out["error"] = self.error
+        if self.result is not None:
+            out.update(
+                value=self.result.value,
+                n_evals=self.result.n_evals,
+                n_gens=self.result.n_gens,
+                arg=[float(v) for v in jnp.asarray(self.result.arg).ravel()],
+            )
+        return out
 
 
 class ObserverHub:

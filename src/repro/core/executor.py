@@ -76,12 +76,31 @@ def _make_eval_once(f: Function, cfg: ExecutorConfig) -> Callable[[Array], Array
     raise ValueError(f"unknown backend {cfg.backend!r}; expected one of {BACKENDS}")
 
 
+# Per-bucket evaluator cache: the scheduler rebuilds an optimizer per bucket
+# flush, and a stable evaluator identity keeps the downstream jit caches warm
+# (a fresh closure would recompile every generation step). Keyed by objective
+# identity + config; values carry the live objects so a recycled id() can
+# never alias a dead entry. FIFO-capped: keys are request-controlled, so an
+# adversarial traffic mix must recompile rather than grow memory unboundedly.
+_EVALUATOR_CACHE: dict[tuple, tuple] = {}
+_EVALUATOR_CACHE_MAX = 256
+
+
 def make_batch_evaluator(
     f: Function,
     cfg: ExecutorConfig = ExecutorConfig(),
     mesh: Mesh | None = None,
 ) -> Callable[[Array], Array]:
-    """Return ``evaluate(pop: (P, D)) -> (P,)`` with the executor semantics above."""
+    """Return ``evaluate(pop: (P, D)) -> (P,)`` with the executor semantics above.
+
+    Evaluators are memoized on ``(objective identity, cfg, mesh identity)`` —
+    repeated builds for the same shape-class (scheduler buckets, benchmark
+    loops) return the same callable.
+    """
+    ck = (f.name, id(f.fn), id(f.shift), f.bias, cfg, id(mesh))
+    hit = _EVALUATOR_CACHE.get(ck)
+    if hit is not None and hit[0] is f.fn and hit[1] is mesh:
+        return hit[2]
 
     _eval_once = _make_eval_once(f, cfg)
 
@@ -98,6 +117,7 @@ def make_batch_evaluator(
         return fit
 
     if mesh is None or cfg.mesh_axis is None:
+        _cache_put(ck, (f.fn, mesh, evaluate))
         return evaluate
 
     axis = cfg.mesh_axis
@@ -117,7 +137,14 @@ def make_batch_evaluator(
         )(padded)
         return out[:pcount]
 
+    _cache_put(ck, (f.fn, mesh, sharded_evaluate))
     return sharded_evaluate
+
+
+def _cache_put(key: tuple, val: tuple) -> None:
+    _EVALUATOR_CACHE[key] = val
+    while len(_EVALUATOR_CACHE) > _EVALUATOR_CACHE_MAX:
+        _EVALUATOR_CACHE.pop(next(iter(_EVALUATOR_CACHE)))
 
 
 def distributed_map_reduce(

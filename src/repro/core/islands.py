@@ -91,6 +91,10 @@ class IslandOptimizer:
         self.mesh = mesh
         self.exec_cfg = exec_cfg
         self.round_callback = round_callback
+        # Per-objective compiled multi-job runner (see minimize_many). Keyed by
+        # objective identity so a scheduler holding one optimizer per bucket
+        # reuses the jitted jobs-axis program across flushes.
+        self._many_cache: dict[tuple, tuple[Any, Callable]] = {}
 
     # -- engine ------------------------------------------------------------
 
@@ -171,12 +175,34 @@ class IslandOptimizer:
 
         return jax.tree.map(put, state)
 
-    def minimize(self, f: Function, key: Array) -> OptimizeResult:
+    def _budget(self, algo: MetaHeuristic) -> tuple[int, int]:
+        """(n_rounds, per_round_evals) from the eval budget — one accounting
+        rule shared by minimize and minimize_many."""
         cfg = self.cfg
-        algo = self._build(f)
         per_round = algo.evals_per_gen * cfg.n_islands * cfg.sync_every
         budget = cfg.max_evals - algo.init_evals * cfg.n_islands
-        n_rounds = max(1, budget // max(per_round, 1))
+        return max(1, budget // max(per_round, 1)), per_round
+
+    def _single_fn(self, f: Function) -> tuple[MetaHeuristic, Callable]:
+        """Cached (algo, jitted device-resident run) for ``f`` — repeated
+        ``minimize`` calls on one optimizer reuse the compiled program instead
+        of re-tracing a fresh closure every call."""
+        ck = ("single", f.name, id(f.fn), id(f.shift), f.bias)
+        hit = self._many_cache.get(ck)
+        if hit is not None and hit[0] is f.fn:
+            return hit[1], hit[2]
+        algo = self._build(f)
+        run = jax.jit(self._run_fn(algo), donate_argnums=0)
+        self._many_cache[ck] = (f.fn, algo, run)
+        return algo, run
+
+    def minimize(self, f: Function, key: Array) -> OptimizeResult:
+        cfg = self.cfg
+        if self.round_callback is None:
+            algo, run = self._single_fn(f)
+        else:
+            algo, run = self._build(f), None
+        n_rounds, per_round = self._budget(algo)
 
         key, ik = jax.random.split(key)
         if cfg.n_islands > 1:
@@ -191,7 +217,6 @@ class IslandOptimizer:
         with ctx:
             if self.round_callback is None:
                 # Device-resident path: one jit, one host pull at the end.
-                run = jax.jit(self._run_fn(algo), donate_argnums=0)
                 arg, val, history = jax.device_get(run(state, round_keys))
             else:
                 # Host-stepped path: round granularity for checkpoint/coupling.
@@ -211,6 +236,85 @@ class IslandOptimizer:
             arg=arg, value=float(val), n_evals=n_evals,
             n_gens=n_rounds * cfg.sync_every, history=history,
         )
+
+    # -- jobs axis ---------------------------------------------------------
+
+    def _many_fn(self, f: Function) -> tuple[MetaHeuristic, Callable]:
+        """Compiled jobs-axis runner for objective ``f``: ``keys (J, 2) ->
+        (args (J, dim), vals (J,), histories (J, n_rounds))``.
+
+        Each job replays ``minimize``'s exact device program — the same
+        ``split``/``_chain_split`` key discipline, init, round scan and
+        incumbent selection — so a job's trajectory is bit-identical to a
+        standalone ``minimize`` call with the same key. ``vmap`` over jobs
+        composes outside the per-island ``vmap`` and the executor's
+        ``shard_map``: J same-shaped jobs cost one dispatch instead of J.
+        """
+        ck = (f.name, id(f.fn), id(f.shift), f.bias)
+        hit = self._many_cache.get(ck)
+        if hit is not None and hit[0] is f.fn:
+            return hit[1], hit[2]
+
+        cfg = self.cfg
+        algo = self._build(f)
+        n_rounds, _ = self._budget(algo)
+        run = self._run_fn(algo)
+        stacked = cfg.n_islands > 1
+
+        def one_job(k: Array) -> tuple[Array, Array, Array]:
+            key, ik = jax.random.split(k)
+            if stacked:
+                state = jax.vmap(algo.init)(jax.random.split(ik, cfg.n_islands))
+            else:
+                state = algo.init(ik)
+            return run(state, _chain_split(key, n_rounds))
+
+        many = jax.jit(jax.vmap(one_job))
+        self._many_cache[ck] = (f.fn, algo, many)
+        return algo, many
+
+    def minimize_many(self, f: Function, keys: Array) -> list[OptimizeResult]:
+        """Run one job per row of ``keys (J, 2)`` in a single jitted dispatch.
+
+        The scheduler's bucket-execution primitive: all jobs share this
+        optimizer's config (one shape-class), differing only by PRNG key.
+        When a mesh is attached the jobs axis is sharded over
+        ``cfg.island_axes`` — the multi-job analogue of island sharding.
+        """
+        cfg = self.cfg
+        if self.round_callback is not None:
+            raise ValueError("minimize_many is device-resident only; "
+                             "round_callback requires per-job minimize calls")
+        algo, many = self._many_fn(f)
+        n_rounds, per_round = self._budget(algo)
+
+        keys = jnp.asarray(keys)
+        n_jobs = keys.shape[0]
+        if self.mesh is not None:
+            # Bucket sizes are arbitrary (the service flushes whatever the
+            # deadline window collected): pad the jobs axis to a multiple of
+            # the sharding axis and slice the extras back off below.
+            n_dev = 1
+            for a in cfg.island_axes:
+                n_dev *= self.mesh.shape[a]
+            pad = (-n_jobs) % n_dev
+            if pad:
+                keys = jnp.concatenate(
+                    [keys, jnp.broadcast_to(keys[:1], (pad, *keys.shape[1:]))])
+            keys = jax.device_put(
+                keys, NamedSharding(self.mesh, P(cfg.island_axes, None)))
+        ctx = self.mesh if self.mesh is not None else _nullcontext()
+        with ctx:
+            args, vals, hists = jax.device_get(many(keys))
+
+        n_evals = algo.init_evals * cfg.n_islands + n_rounds * per_round
+        return [
+            OptimizeResult(
+                arg=args[j], value=float(vals[j]), n_evals=n_evals,
+                n_gens=n_rounds * cfg.sync_every, history=hists[j],
+            )
+            for j in range(n_jobs)
+        ]
 
 
 def _select_best(state: State, stacked: bool) -> tuple[Array, Array]:

@@ -1,0 +1,199 @@
+"""Shape-bucketed multi-job scheduler — popt4jlib ``PDBatchTaskExecutorSrv``
+over the device-resident island engine (DESIGN.md §5).
+
+The Java server accepts batches of independent ``TaskObject``s from many
+clients and farms them to a worker network. Here the "worker network" is one
+compiled XLA program: concurrent :class:`~repro.core.api.OptRequest`s are
+bucketed by compiled shape-class (``OptRequest.shape_class()`` — everything
+but the seed), and each bucket is packed into a single jitted run by adding a
+leading *jobs* axis over the engine state (``IslandOptimizer.minimize_many``).
+``vmap`` over jobs composes with the per-island ``vmap`` and the executor's
+``shard_map``, so N same-shaped jobs cost one dispatch instead of N — and one
+compilation instead of N, because the per-bucket optimizer (and its evaluator,
+via the executor cache) is reused across flushes.
+
+POLO-style policy/execution separation: the algorithms never learn whether
+they ran standalone, under the scheduler, or sharded over a mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+import traceback
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core.api import OptRequest, OptResponse
+from repro.core.executor import ExecutorConfig
+from repro.core.islands import IslandConfig, IslandOptimizer
+from repro.functions import get as get_function
+
+BucketKey = tuple
+
+
+@dataclasses.dataclass
+class _Job:
+    request: OptRequest
+    response: OptResponse
+    submitted_at: float  # host monotonic clock; drives deadline-based flush
+
+
+class ShapeBucketScheduler:
+    """Accepts many concurrent OptRequests, runs each shape-class as one
+    jobs-axis dispatch.
+
+    Host-side lifecycle: ``submit`` queues a job into its bucket;
+    ``flush``/``flush_bucket`` executes pending buckets; ``poll`` reports
+    status without blocking; ``result`` forces the job's bucket to run and
+    returns its :class:`OptimizeResult` envelope.
+    """
+
+    def __init__(self, mesh: Mesh | None = None,
+                 exec_cfg: ExecutorConfig = ExecutorConfig(),
+                 max_cached_buckets: int = 64) -> None:
+        self.mesh = mesh
+        self.exec_cfg = exec_cfg
+        # shape-classes are client-controlled, so the compiled-program caches
+        # are LRU-capped — a traffic mix wider than the cap recompiles instead
+        # of growing host/device memory without bound
+        self.max_cached_buckets = max_cached_buckets
+        self._pending: dict[BucketKey, list[_Job]] = {}
+        self._jobs: dict[str, _Job] = {}
+        self._optimizers: dict[BucketKey, IslandOptimizer] = {}
+        self._functions: dict[tuple[str, int], Any] = {}
+        self._ids = itertools.count()
+        self.n_dispatches = 0   # bucket runs issued (perf accounting)
+        self.n_jobs_run = 0
+
+    # -- submission --------------------------------------------------------
+
+    def submit(self, req: OptRequest, job_id: str | None = None) -> str:
+        if job_id is None:
+            job_id = f"job{next(self._ids)}"
+            while job_id in self._jobs:    # skip ids a client claimed itself
+                job_id = f"job{next(self._ids)}"
+        elif job_id in self._jobs:
+            raise ValueError(f"duplicate job id {job_id!r}")
+        job = _Job(req, OptResponse(job_id), time.monotonic())
+        self._jobs[job_id] = job
+        self._pending.setdefault(req.shape_class(), []).append(job)
+        return job_id
+
+    # -- bucket plumbing ---------------------------------------------------
+
+    def _lru_get(self, cache: dict, key):
+        """Hit moves the entry to the MRU end (dicts keep insertion order)."""
+        val = cache.pop(key, None)
+        if val is not None:
+            cache[key] = val
+        return val
+
+    def _lru_put(self, cache: dict, key, val) -> None:
+        cache[key] = val
+        while len(cache) > self.max_cached_buckets:
+            cache.pop(next(iter(cache)))
+
+    def _function(self, req: OptRequest):
+        fk = (req.fn, req.dim)
+        f = self._lru_get(self._functions, fk)
+        if f is None:
+            f = get_function(req.fn, req.dim)
+            self._lru_put(self._functions, fk, f)
+        return f
+
+    def _optimizer(self, req: OptRequest) -> IslandOptimizer:
+        key = req.shape_class()
+        opt = self._lru_get(self._optimizers, key)
+        if opt is None:
+            from repro.core import ALGORITHMS  # late: core/__init__ imports us
+            cfg = IslandConfig(
+                n_islands=req.n_islands, pop=req.pop, dim=req.dim,
+                sync_every=req.sync_every, migration=req.migration,
+                n_migrants=req.n_migrants, share_incumbent=req.share_incumbent,
+                max_evals=req.max_evals,
+            )
+            opt = IslandOptimizer(
+                ALGORITHMS[req.algo], cfg, params=dict(req.params),
+                mesh=self.mesh,
+                exec_cfg=dataclasses.replace(self.exec_cfg, backend=req.backend),
+            )
+            self._lru_put(self._optimizers, key, opt)
+        return opt
+
+    def pending_buckets(self) -> list[tuple[BucketKey, int, float]]:
+        """(key, n_jobs, oldest_submit_time) per non-empty bucket."""
+        return [(k, len(js), js[0].submitted_at)  # FIFO: first is oldest
+                for k, js in self._pending.items()]
+
+    def pending_count(self, key: BucketKey) -> int:
+        """Queued jobs in one bucket — O(1), for the service's size trigger."""
+        return len(self._pending.get(key, ()))
+
+    # -- execution ---------------------------------------------------------
+
+    def flush_bucket(self, key: BucketKey) -> list[str]:
+        """Run every pending job in one bucket as a single jobs-axis dispatch."""
+        jobs = self._pending.pop(key, [])
+        if not jobs:
+            return []
+        for j in jobs:
+            j.response.status = "running"
+        req0 = jobs[0].request
+        try:
+            opt = self._optimizer(req0)
+            f = self._function(req0)
+            keys = jnp.stack(
+                [jax.random.PRNGKey(j.request.seed) for j in jobs])
+            results = opt.minimize_many(f, keys)
+        except Exception as e:  # noqa: BLE001 — job-level fault isolation
+            msg = f"{type(e).__name__}: {e}"
+            traceback.print_exc()
+            for j in jobs:
+                j.response.status = "error"
+                j.response.error = msg
+            return [j.response.job_id for j in jobs]
+        self.n_dispatches += 1
+        self.n_jobs_run += len(jobs)
+        for j, res in zip(jobs, results):
+            j.response.status = "done"
+            j.response.result = res
+        return [j.response.job_id for j in jobs]
+
+    def flush(self) -> int:
+        """Run all pending buckets; returns the number of jobs executed."""
+        n = 0
+        for key in list(self._pending):
+            n += len(self.flush_bucket(key))
+        return n
+
+    # -- retrieval ---------------------------------------------------------
+
+    def poll(self, job_id: str) -> OptResponse:
+        return self._jobs[job_id].response
+
+    def result(self, job_id: str, evict: bool = False) -> OptResponse:
+        """Blocking fetch: flush the job's bucket if it has not run yet.
+
+        ``evict=True`` drops the finished job's record (the Java server's
+        fetch-once result semantics) — long-lived services use it so the job
+        table does not grow without bound.
+        """
+        job = self._jobs[job_id]
+        if job.response.status == "queued":
+            self.flush_bucket(job.request.shape_class())
+        if evict and job.response.status in ("done", "error"):
+            del self._jobs[job_id]
+        return job.response
+
+    def stats(self) -> dict[str, int]:
+        return {
+            "submitted": len(self._jobs),
+            "pending": sum(len(v) for v in self._pending.values()),
+            "buckets_pending": len(self._pending),
+            "dispatches": self.n_dispatches,
+            "jobs_run": self.n_jobs_run,
+        }

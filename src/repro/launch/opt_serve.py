@@ -1,0 +1,220 @@
+"""Multi-job optimization service — the popt4jlib ``PDBTExecSingleCltWrkInitSrv``
+client/server loop over the shape-bucketed scheduler (DESIGN.md §5).
+
+One JSON object per line (JSONL), over stdin/stdout (default) or TCP
+(``--tcp PORT``). The ops mirror the Java server's client protocol
+(submit work / poll / fetch results / shutdown):
+
+    {"op": "submit", "request": {"fn": "rastrigin", "algo": "de", "dim": 8,
+                                 "max_evals": 4000, "seed": 1}}
+        -> {"id": "job0", "status": "queued"}
+    {"op": "poll", "id": "job0"}      -> {"id": "job0", "status": "queued|running|done|error"}
+    {"op": "result", "id": "job0"}    -> {"id": "job0", "status": "done",
+                                          "value": ..., "arg": [...], "n_evals": ...}
+    {"op": "flush"}                   -> {"flushed": N}
+    {"op": "stats"}                   -> scheduler + queue counters
+    {"op": "quit"}                    -> {"bye": true}
+
+Batching policy (host-side queue): a bucket is dispatched when it reaches
+``--max-batch`` queued jobs, when its oldest job ages past the ``--flush-ms``
+deadline, or when a client forces it via ``result``/``flush``. Everything the
+deadline window packs into one bucket runs as a single jitted jobs-axis
+dispatch.
+
+    PYTHONPATH=src python -m repro.launch.opt_serve --flush-ms 50 <<'EOF'
+    {"op": "submit", "request": {"fn": "sphere", "dim": 4, "max_evals": 2000, "seed": 0}}
+    {"op": "result", "id": "job0"}
+    EOF
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import select
+import socketserver
+import sys
+import threading
+import time
+from typing import Any
+
+from repro.core.api import OptRequest
+from repro.core.scheduler import ShapeBucketScheduler
+
+
+class OptimizationService:
+    """Host-side queue + deadline-based flush around ShapeBucketScheduler.
+
+    Thread-safe: TCP mode serves concurrent clients against one scheduler
+    (the Java server's single-client-at-a-time restriction is lifted — jobs
+    from different connections share buckets).
+    """
+
+    def __init__(self, scheduler: ShapeBucketScheduler | None = None,
+                 max_batch: int = 32, flush_ms: float = 50.0) -> None:
+        self.scheduler = scheduler or ShapeBucketScheduler()
+        self.max_batch = max_batch
+        self.flush_ms = flush_ms
+        self._lock = threading.Lock()
+
+    # -- protocol ----------------------------------------------------------
+
+    def handle(self, msg: dict[str, Any]) -> dict[str, Any]:
+        """Execute one protocol op; always returns a JSON-able reply."""
+        try:
+            # poll is a single dict lookup + attribute read (GIL-atomic):
+            # answer without the lock so status stays responsive while
+            # another client's bucket dispatch (compile + run) holds it.
+            # stats iterates the scheduler's dicts, so it must take the lock.
+            if msg.get("op") == "poll":
+                return {"id": msg["id"],
+                        "status": self.scheduler.poll(msg["id"]).status}
+            with self._lock:
+                return self._dispatch(msg)
+        except Exception as e:  # noqa: BLE001 — protocol errors go to the client
+            return {"error": f"{type(e).__name__}: {e}"}
+
+    def _dispatch(self, msg: dict[str, Any]) -> dict[str, Any]:
+        op = msg.get("op")
+        sched = self.scheduler
+        if op == "submit":
+            req = OptRequest.from_dict(msg["request"])
+            job_id = sched.submit(req, msg.get("id"))
+            resp = {"id": job_id, "status": "queued"}
+            key = req.shape_class()
+            if sched.pending_count(key) >= self.max_batch:
+                sched.flush_bucket(key)
+                resp["status"] = sched.poll(job_id).status
+            return resp
+        if op == "result":
+            # fetch-once: the record is evicted so a long-lived server's job
+            # table stays bounded; a second result/poll for the id errors
+            return sched.result(msg["id"], evict=True).to_dict()
+        if op == "flush":
+            return {"flushed": sched.flush()}
+        if op == "stats":
+            return dict(sched.stats(), max_batch=self.max_batch,
+                        flush_ms=self.flush_ms)
+        if op == "quit":
+            sched.flush()
+            return {"bye": True}
+        raise ValueError(f"unknown op {op!r}")
+
+    # -- deadline flush ----------------------------------------------------
+
+    def tick(self, now: float | None = None) -> int:
+        """Flush buckets whose oldest job aged past the deadline."""
+        now = time.monotonic() if now is None else now
+        n = 0
+        with self._lock:
+            for key, _, oldest in self.scheduler.pending_buckets():
+                if (now - oldest) * 1e3 >= self.flush_ms:
+                    n += len(self.scheduler.flush_bucket(key))
+        return n
+
+    def next_deadline(self) -> float | None:
+        """Monotonic time of the earliest pending flush, or None if idle."""
+        with self._lock:
+            buckets = self.scheduler.pending_buckets()
+        if not buckets:
+            return None
+        return min(oldest for _, _, oldest in buckets) + self.flush_ms / 1e3
+
+
+def _handle_line(service: OptimizationService, line: str) -> tuple[dict, bool]:
+    """(reply, is_quit) for one JSONL request line."""
+    try:
+        msg = json.loads(line)
+    except json.JSONDecodeError as e:
+        return {"error": f"bad json: {e}"}, False
+    if not isinstance(msg, dict):          # e.g. a bare `42` — valid JSON,
+        return {"error": "request must be a JSON object"}, False  # not an op
+    return service.handle(msg), msg.get("op") == "quit"
+
+
+def serve_stdin(service: OptimizationService) -> None:
+    """stdin-JSONL loop: select() on the raw fd with the flush deadline as
+    timeout, so queued buckets dispatch even while the client is silent.
+    Reads unbuffered (os.read + explicit line buffer) — buffered readline
+    would swallow ops that arrive several-per-write and leave them pending
+    while select() sees a quiet fd."""
+    out, fd = sys.stdout, sys.stdin.fileno()
+    buf = b""
+    while True:
+        while b"\n" in buf:               # drain buffered ops before select
+            raw, buf = buf.split(b"\n", 1)
+            line = raw.decode("utf-8", "replace").strip()
+            if not line:
+                continue
+            reply, quit_ = _handle_line(service, line)
+            print(json.dumps(reply), file=out, flush=True)
+            if quit_:
+                return
+        deadline = service.next_deadline()
+        timeout = None if deadline is None else max(0.0, deadline - time.monotonic())
+        ready, _, _ = select.select([fd], [], [], timeout)
+        if not ready:
+            service.tick()
+            continue
+        chunk = os.read(fd, 1 << 16)
+        if not chunk:                     # EOF: run what's left, then exit
+            service.handle({"op": "flush"})
+            return
+        buf += chunk
+
+
+class _LineHandler(socketserver.StreamRequestHandler):
+    def handle(self) -> None:  # one JSONL session per connection
+        service: OptimizationService = self.server.service  # type: ignore[attr-defined]
+        for raw in self.rfile:
+            line = raw.decode("utf-8", "replace").strip()
+            if not line:
+                continue
+            reply, quit_ = _handle_line(service, line)
+            self.wfile.write((json.dumps(reply) + "\n").encode())
+            self.wfile.flush()
+            if quit_:
+                return
+
+
+def serve_tcp(service: OptimizationService, host: str, port: int) -> None:
+    """TCP-JSONL server: threaded clients + a daemon ticking the deadline."""
+
+    class Server(socketserver.ThreadingTCPServer):
+        allow_reuse_address = True
+        daemon_threads = True
+
+    def ticker() -> None:
+        while True:
+            time.sleep(max(service.flush_ms / 2e3, 1e-3))
+            service.tick()
+
+    threading.Thread(target=ticker, daemon=True).start()
+    with Server((host, port), _LineHandler) as srv:
+        srv.service = service  # type: ignore[attr-defined]
+        print(f"[opt_serve] listening on {host}:{srv.server_address[1]}",
+              file=sys.stderr, flush=True)
+        srv.serve_forever()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--max-batch", type=int, default=32,
+                    help="flush a bucket as soon as it holds this many jobs")
+    ap.add_argument("--flush-ms", type=float, default=50.0,
+                    help="deadline: max queueing delay before a bucket runs")
+    ap.add_argument("--tcp", type=int, default=None, metavar="PORT",
+                    help="serve TCP-JSONL on this port instead of stdin")
+    ap.add_argument("--host", default="127.0.0.1")
+    args = ap.parse_args()
+
+    service = OptimizationService(max_batch=args.max_batch,
+                                  flush_ms=args.flush_ms)
+    if args.tcp is not None:
+        serve_tcp(service, args.host, args.tcp)
+    else:
+        serve_stdin(service)
+
+
+if __name__ == "__main__":
+    main()

@@ -67,3 +67,38 @@ def make_decode_step(cfg: ModelConfig):
                            embeds=batch.get("embeds"))
 
     return serve_step
+
+
+def make_prefill_decode(cfg: ModelConfig):
+    """Cache-filling prefill in ONE dispatch: the whole (B, S) prompt is
+    teacher-forced through the decode cache and the last-position logits come
+    back ready for sampling. Attention archs run all S positions in parallel
+    (multi-token ``decode_step``); recurrent archs scan the prompt inside the
+    same jit — either way the host issues one call, not O(S)."""
+
+    def prefill_decode(params: PyTree, state: PyTree, batch: PyTree):
+        p = _cast_params(params, cfg)
+        if cfg.block_pattern == "attn":
+            return decode_step(p, cfg, state, tokens=batch.get("tokens"),
+                               embeds=batch.get("embeds"))
+
+        toks, embs = batch.get("tokens"), batch.get("embeds")
+        xs = toks if embs is None else embs
+
+        # carry the latest logits instead of stacking all S of them — only
+        # the last position feeds sampling, so an (S, B, Vp) scan output
+        # would be pure wasted HBM at long prompts
+        def body(carry: tuple, x_t):
+            st, _ = carry
+            logits, st = decode_step(
+                p, cfg, st,
+                tokens=x_t[:, None] if embs is None else None,
+                embeds=x_t[:, None] if embs is not None else None)
+            return (st, logits), None
+
+        logits0 = jnp.zeros((xs.shape[0], cfg.padded_vocab), jnp.float32)
+        (state, logits), _ = jax.lax.scan(body, (state, logits0),
+                                          jnp.swapaxes(xs, 0, 1))
+        return logits, state
+
+    return prefill_decode

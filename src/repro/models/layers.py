@@ -196,10 +196,28 @@ def attention(params: Params, x: Array, cfg: ModelConfig, *,
         T = ck.shape[1]
         ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_pos, 1)
         cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), cache_pos, 1)
-        # grouped einsum: the cache stays sequence-sharded and un-expanded
-        out = _attend_direct_g(q, ck.astype(cd), cv.astype(cd),
-                               positions, jnp.arange(T), window,
-                               cfg.attn_softcap, scale)
+        if S > chunked_threshold:
+            # long multi-token prefill through the cache: online-softmax over
+            # KV blocks, so the (S, T) score matrix never materializes (the
+            # same escape the non-cache branch takes). Cache slots are padded
+            # to a block multiple; pad positions sit beyond every query and
+            # are causally masked.
+            kvb = min(cfg.attn_kv_block, T)
+            pad = (-T) % kvb
+            rep = H // KV
+            kf = _repeat_kv(ck.astype(cd), rep)
+            vf = _repeat_kv(cv.astype(cd), rep)
+            if pad:
+                kf = jnp.pad(kf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            out = _attend_chunked(q, kf, vf, positions, jnp.arange(T + pad),
+                                  window, softcap_val=cfg.attn_softcap,
+                                  scale=scale, kv_block=kvb)
+        else:
+            # grouped einsum: the cache stays sequence-sharded and un-expanded
+            out = _attend_direct_g(q, ck.astype(cd), cv.astype(cd),
+                                   positions, jnp.arange(T), window,
+                                   cfg.attn_softcap, scale)
         y = out.reshape(B, S, H * hd) @ wo
         return y, (ck, cv)
 

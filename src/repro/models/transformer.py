@@ -357,10 +357,19 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int) -> Params:
 
 def decode_step(params: Params, cfg: ModelConfig, state: Params,
                 tokens: Array | None = None, embeds: Array | None = None):
-    """One decode step: new token(s) (B, 1) -> logits (B, Vp), updated state."""
+    """One decode step: new token(s) (B, S) -> last-position logits (B, Vp),
+    updated state. For the pure-attention pattern S may exceed 1 — the whole
+    chunk is teacher-forced through the KV cache in one call (the batched
+    prefill path); the recurrent patterns are single-token (S == 1).
+    """
     x = embed_inputs(params, cfg, tokens, embeds)
     pos = state["pos"]
-    positions = pos[None]  # (1,)
+    Ssz = x.shape[1]
+    if cfg.block_pattern != "attn" and Ssz != 1:
+        raise ValueError(
+            f"{cfg.block_pattern} decode_step is single-token (got S={Ssz}); "
+            "use launch.steps.make_prefill_decode for multi-token prefill")
+    positions = pos + jnp.arange(Ssz)  # query positions; causal vs cache arange
 
     if cfg.block_pattern == "attn":
         def body(carry, inp):
@@ -373,7 +382,7 @@ def decode_step(params: Params, cfg: ModelConfig, state: Params,
         x, (k_new, v_new) = jax.lax.scan(
             body, x,
             (params["layers"], jnp.arange(cfg.n_layers), state["k"], state["v"]))
-        new_state = {**state, "pos": pos + 1, "k": k_new, "v": v_new}
+        new_state = {**state, "pos": pos + Ssz, "k": k_new, "v": v_new}
 
     elif cfg.block_pattern == "ssm":
         def body(carry, inp):

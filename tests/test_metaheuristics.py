@@ -99,6 +99,60 @@ def test_starvation_routes_to_weakest():
     assert bool(jnp.all(new_fit[1] == fit[1]))       # non-host islands untouched
 
 
+def test_ring_adopts_only_better_migrants():
+    """A migrant worse than the receiver's resident worst is rejected."""
+    I, P, D = 3, 8, 2
+    pop = jax.random.uniform(KEY, (I, P, D))
+    # island 0's best (the migrants island 1 receives) are all worse than
+    # island 1's worst resident -> island 1 must be untouched
+    fit = jnp.stack([
+        jnp.full((P,), 100.0),                       # donor to island 1
+        jnp.arange(P, dtype=jnp.float32),            # receiver, all < 100
+        jnp.full((P,), 50.0),
+    ])
+    new_pop, new_fit = migration.ring(pop, fit, k=2)
+    assert bool(jnp.all(new_fit[1] == fit[1]))
+    assert bool(jnp.all(new_pop[1] == pop[1]))
+    # island 2 (worst resident 50) does adopt island 1's best (0.0)
+    assert float(new_fit[2].min()) == 0.0
+
+
+def test_starvation_picks_emptiest_host():
+    """The island with the fewest live members hosts the immigration."""
+    I, P, D = 3, 6, 2
+    pop = jnp.zeros((I, P, D))
+    fit = jnp.full((I, P), 10.0)
+    alive = jnp.ones((I, P), bool)
+    # live counts: island0 = 6, island1 = 1, island2 = 4  -> host must be 1
+    fit = fit.at[1, 1:].set(jnp.inf)
+    alive = alive.at[1, 1:].set(False)
+    fit = fit.at[2, 4:].set(jnp.inf)
+    alive = alive.at[2, 4:].set(False)
+    fit = fit.at[0, 0].set(1.0)
+    new_pop, new_fit = migration.starvation(pop, fit, k=2, alive=alive)
+    assert float(new_fit[1].min()) == 1.0            # arrived at island 1
+    assert bool(jnp.all(new_fit[0] == fit[0]))       # donors untouched
+    assert bool(jnp.all(new_fit[2] == fit[2]))
+
+
+def test_starvation_clamps_migrants_to_paper_limit():
+    """At most k<=2 individuals leave an island per round, even if k > 2."""
+    I, P, D = 3, 8, 2
+    pop = jnp.zeros((I, P, D))
+    # distinct per-donor fitness bands so arrivals are attributable
+    fit = jnp.stack([
+        jnp.arange(P, dtype=jnp.float32),            # donor 0: 0..7
+        jnp.arange(P, dtype=jnp.float32) + 10.0,     # donor 1: 10..17
+        jnp.full((P,), jnp.inf),                     # host: starving (0 alive)
+    ])
+    new_pop, new_fit = migration.starvation(pop, fit, k=5)
+    from_donor0 = int(jnp.sum(new_fit[2] < 10.0))
+    from_donor1 = int(jnp.sum((new_fit[2] >= 10.0) & (new_fit[2] < 20.0)))
+    assert from_donor0 <= 2 and from_donor1 <= 2, (from_donor0, from_donor1)
+    assert from_donor0 == 2                          # the best two did arrive
+    assert float(new_fit[2].min()) == 0.0
+
+
 def test_no_migration_single_island():
     pop = jax.random.uniform(KEY, (1, 8, 3))
     fit = jax.random.uniform(jax.random.fold_in(KEY, 2), (1, 8))

@@ -74,6 +74,56 @@ def test_arch_decode_matches_forward(arch):
     assert err / scale < 5e-2, (arch, err, scale)
 
 
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "mamba2-370m"])
+def test_batched_prefill_matches_per_token_decode(arch):
+    """make_prefill_decode (one dispatch) == the per-token decode loop it
+    replaced in launch/serve.py: same last logits, same cache position."""
+    from repro.launch.steps import make_decode_step, make_prefill_decode
+    cfg = dataclasses.replace(_reduced(arch), remat=False)
+    params = init_params(KEY, cfg)
+    B, T = 2, 8
+    toks = jax.random.randint(jax.random.fold_in(KEY, 2), (B, T), 0, cfg.vocab)
+
+    step = jax.jit(make_decode_step(cfg))
+    st = init_decode_state(cfg, B, T + 4)
+    logits = None
+    for t in range(T):
+        logits, st = step(params, st, {"tokens": toks[:, t:t + 1]})
+
+    prefill = jax.jit(make_prefill_decode(cfg))
+    logits2, st2 = prefill(params, init_decode_state(cfg, B, T + 4),
+                           {"tokens": toks})
+
+    assert int(st2["pos"]) == int(st["pos"]) == T
+    scale = float(jnp.max(jnp.abs(logits))) + 1e-6
+    err = float(jnp.max(jnp.abs(logits2 - logits))) / scale
+    assert err < 1e-2, (arch, err)
+    for name in ("k", "v", "conv", "ssd"):
+        if name in st:
+            cerr = float(jnp.max(jnp.abs(st2[name].astype(jnp.float32)
+                                         - st[name].astype(jnp.float32))))
+            assert cerr < 1e-2, (arch, name, cerr)
+
+
+def test_long_prefill_takes_chunked_cache_path():
+    """Prompts past attn_direct_max route through the online-softmax cache
+    branch (no (S, T) scores) and match the direct path, including a cache
+    length that is not a multiple of the KV block (padding)."""
+    from repro.launch.steps import make_prefill_decode
+    base = dataclasses.replace(_reduced("llama3.2-1b"), remat=False)
+    params = init_params(KEY, base)
+    toks = jax.random.randint(jax.random.fold_in(KEY, 3), (2, 16), 0, base.vocab)
+    outs = []
+    for cfg in (base, dataclasses.replace(base, attn_direct_max=4,
+                                          attn_kv_block=8)):
+        st = init_decode_state(cfg, 2, 21)       # 21 % 8 != 0: pads the cache
+        lg, st = jax.jit(make_prefill_decode(cfg))(params, st, {"tokens": toks})
+        assert int(st["pos"]) == 16
+        outs.append(lg)
+    err = float(jnp.max(jnp.abs(outs[0] - outs[1])))
+    assert err < 1e-3, err
+
+
 def test_loss_decreases_reduced_llama():
     cfg = _reduced("llama3.2-1b")
     params = init_params(KEY, cfg)

@@ -1,0 +1,54 @@
+"""Markdown link check (stdlib-only, offline): every relative link/image in
+the given files must resolve to an existing file or directory.
+
+    python tools/check_links.py README.md DESIGN.md CHANGES.md
+
+Checks ``[text](target)`` and ``![alt](target)``. External (``http(s)://``,
+``mailto:``) and pure-anchor (``#...``) targets are skipped — CI stays
+hermetic. Exits non-zero listing every broken target.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def check_file(path: Path) -> list[str]:
+    errors = []
+    text = path.read_text(encoding="utf-8")
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        rel = target.split("#", 1)[0]   # strip section anchors
+        if not rel:
+            continue
+        if not (path.parent / rel).exists():
+            line = text.count("\n", 0, m.start()) + 1
+            errors.append(f"{path}:{line}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: check_links.py FILE.md [FILE.md ...]", file=sys.stderr)
+        return 2
+    errors: list[str] = []
+    for name in argv:
+        p = Path(name)
+        if not p.exists():
+            errors.append(f"{name}: file not found")
+            continue
+        errors.extend(check_file(p))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"[check_links] {len(argv)} files, {len(errors)} broken links")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
