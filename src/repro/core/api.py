@@ -15,6 +15,10 @@ Java -> JAX mapping (see DESIGN.md §2):
   PDBTExecSingleCltWrkInitSrv server    -> OptRequest/OptResponse +
       core.scheduler.ShapeBucketScheduler + launch.opt_serve (DESIGN.md §5):
       many concurrent jobs packed into one jitted run per shape-class.
+  GradientDescent.LocalOptimizerIntf    -> optim.descent: standalone multistart
+      runs plus the batched polish layer (IslandConfig.polish /
+      OptRequest.polish) that hybridizes any meta-heuristic in-scan
+      (DESIGN.md §6), and core.pipeline for explore-then-polish staging.
 
 Runs are device-resident by default: IslandOptimizer.minimize is one jitted
 lax.scan over sync rounds, results cross to the host once (DESIGN.md §4).
@@ -46,7 +50,9 @@ class OptimizeResult:
 class Optimizer(Protocol):
     """popt4jlib ``OptimizerIntf``."""
 
-    def minimize(self, f: Function, key: Array) -> OptimizeResult: ...
+    def minimize(self, f: Function, key: Array) -> OptimizeResult:
+        """Minimize objective ``f`` from PRNG ``key``; pure and reproducible."""
+        ...
 
 
 # ---------------------------------------------------------------------------
@@ -59,6 +65,7 @@ class Optimizer(Protocol):
 SHAPE_CLASS_FIELDS = (
     "fn", "algo", "dim", "pop", "n_islands", "sync_every", "migration",
     "n_migrants", "share_incumbent", "max_evals", "backend", "params",
+    "polish", "polish_every", "polish_topk", "polish_steps",
 )
 
 
@@ -85,6 +92,14 @@ class OptRequest:
     share_incumbent: bool = False
     backend: str = "xla"            # ExecutorConfig.backend
     params: tuple[tuple[str, Any], ...] = ()  # extra algo kwargs, hashable
+    # Hybrid memetic layer (DESIGN.md §6). Polish parameters change the
+    # compiled program (an extra in-scan polish stage, its top-k gather and
+    # its cadence predicate), so they are part of the shape-class: hybrid and
+    # plain requests never share a bucket.
+    polish: str = "none"            # none | asd | fcg | avd | bfgs
+    polish_every: int = 1           # sync rounds between polish events
+    polish_topk: int = 4            # per-island candidates polished per event
+    polish_steps: int = 3           # descent iterations per polish event
 
     def shape_class(self) -> tuple:
         """Bucket key: everything that feeds the compiled program's shape or
@@ -119,6 +134,7 @@ class OptResponse:
     error: str | None = None
 
     def to_dict(self) -> dict[str, Any]:
+        """JSONL-serializable reply for the service's result/poll ops."""
         out: dict[str, Any] = {"id": self.job_id, "status": self.status}
         if self.error is not None:
             out["error"] = self.error
@@ -147,6 +163,7 @@ class ObserverHub:
         self.best_val: float = float("inf")
 
     def register(self, fn: Callable[[Array, float], tuple[Array, float] | None]) -> None:
+        """Attach an observer; it may return a refined (arg, value) or None."""
         self._observers.append(fn)
 
     def notify(self, arg: Array, value: float) -> tuple[Array, float]:

@@ -29,6 +29,7 @@ def make(
     ls_shrink: float = 0.6,
     T: float = 1.0,             # Metropolis temperature between basins
 ) -> MetaHeuristic:
+    """Basin-Hopping per-island policy (kick + local probe + Metropolis)."""
     lo, hi = f.lo, f.hi
     kick = perturb_frac * (hi - lo)
     step0 = ls_frac * (hi - lo)

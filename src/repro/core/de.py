@@ -73,6 +73,7 @@ def make(
     fused: bool = False,               # whole generation in one Pallas kernel
     interpret: bool | None = None,     # fused-kernel interpret mode; None = auto
 ) -> MetaHeuristic:
+    """Differential Evolution per-island policy (DE/rand/1/bin, DE/best/1/bin)."""
     assert strategy in ("rand1bin", "best1bin")
     assert barrier_mode in ("sync", "chunked")
     lo, hi = f.lo, f.hi

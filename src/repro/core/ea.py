@@ -24,6 +24,7 @@ def make(
     lam: int | None = None,
     sigma0_frac: float = 0.3,
 ) -> MetaHeuristic:
+    """(mu+lambda) Evolutionary Algorithm per-island policy."""
     lo, hi = f.lo, f.hi
     lam = lam if lam is not None else pop
 

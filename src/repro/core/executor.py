@@ -26,6 +26,12 @@ backend evaluates each chunk. The executor is a *pure function* of its inputs,
 so XLA can fuse it into the surrounding generation step — the distributed
 map/reduce costs nothing extra when the mesh is trivial (CPU tests) and lowers
 to balanced SPMD on the pod.
+
+The evaluator cache below also serves the hybrid memetic layer (DESIGN.md §6):
+``IslandOptimizer._polish`` rebuilds the evaluator for its gradient probes and
+line-search ladders and — because ``make_batch_evaluator`` memoizes on
+(objective, config, mesh) — receives the SAME callable the generation steps
+use, keeping polish on the identical xla/pallas path with zero extra compiles.
 """
 from __future__ import annotations
 
@@ -47,6 +53,9 @@ BACKENDS = ("xla", "pallas")
 
 @dataclasses.dataclass(frozen=True)
 class ExecutorConfig:
+    """How candidate batches are evaluated: backend choice, retry policy and
+    the mesh axis the population is sharded over (DESIGN.md §3)."""
+
     backend: str = "xla"          # evaluation backend: "xla" | "pallas"
     retry_bad: bool = True        # paper: resubmit a failed batch once
     retry_eps: float = 1e-6       # perturbation used for the retry evaluation

@@ -27,6 +27,7 @@ def make(
     delta: float = 0.97,
     alpha0: float = 1.0,
 ) -> MetaHeuristic:
+    """Firefly Algorithm per-island policy (attraction beta0, absorption gamma)."""
     lo, hi = f.lo, f.hi
     L = 1.0 / jnp.sqrt(gamma)
 

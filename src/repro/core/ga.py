@@ -34,6 +34,8 @@ def make(
     age_mean: float = 1e9,      # aging disabled by default (Fig.4 single-island runs)
     age_sd: float = 0.0,
 ) -> MetaHeuristic:
+    """Genetic Algorithm per-island policy (1-pt crossover, Gaussian mutation,
+    optional aging — the paper's DGA island member)."""
     lo, hi = f.lo, f.hi
     n_off = n_offspring if n_offspring is not None else max(1, pop // 4)
     sigma_m = mut_scale * (hi - lo)

@@ -16,6 +16,14 @@ The engine is *device-resident* by default: the whole run is one jitted
 exactly once at the end (DESIGN.md §4). Setting ``round_callback`` switches to
 the host-stepped loop — one jit call per round — so the driver can checkpoint,
 couple optimizers (ObserverHub), and survive restarts at round granularity.
+
+``IslandConfig.polish`` turns any meta-heuristic into a *memetic hybrid*
+(DESIGN.md §6): every ``polish_every`` rounds, each island's ``polish_topk``
+best candidates pass through a batched fixed-shape local descent
+(``optim.descent.make_polish`` — the paper's ``LocalOptimizerIntf``) inside
+the same jitted scan, with polish evaluations charged to ``max_evals``. The
+polish pass is deterministic, so fixed-seed trajectories stay reproducible
+through both ``minimize`` and ``minimize_many``.
 """
 from __future__ import annotations
 
@@ -39,6 +47,9 @@ State = dict[str, Array]
 
 @dataclasses.dataclass(frozen=True)
 class IslandConfig:
+    """Engine topology + budget: islands, migration, sharding and the hybrid
+    memetic polish layer, all fixed before compilation (one shape-class)."""
+
     n_islands: int = 1
     pop: int = 64                 # per-island population capacity
     dim: int = 10
@@ -50,6 +61,14 @@ class IslandConfig:
     island_axes: tuple[str, ...] = ("data",)  # mesh axes the island dim shards over
     pop_axes: tuple[str, ...] | None = None   # mesh axes the population dim shards
                                               # over when n_islands == 1 (Table I)
+    # Hybrid memetic layer (DESIGN.md §6): batched local-descent polish of each
+    # island's top-k candidates, inside the jitted round scan. Polish evals are
+    # charged to max_evals (see _budget), so hybrid and plain runs compare at
+    # equal budgets — the paper's DGA+ASD-style configurations.
+    polish: str = "none"          # none | asd | fcg | avd | bfgs
+    polish_every: int = 1         # sync rounds between polish events
+    polish_topk: int = 4          # per-island candidates polished per event
+    polish_steps: int = 3         # descent iterations per polish event
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,7 +117,11 @@ class IslandOptimizer:
 
     # -- engine ------------------------------------------------------------
 
-    def _build(self, f: Function) -> MetaHeuristic:
+    def _evaluator(self, f: Function) -> Callable[[Array], Array]:
+        """The engine's batch evaluator for ``f`` — memoized by
+        ``make_batch_evaluator``, so every caller (generation steps via
+        ``_build``, polish probes via ``_polish``) receives the SAME callable
+        and therefore the same compiled xla/pallas path."""
         cfg = self.cfg
         pop_axis_shard = (
             self.mesh is not None and cfg.n_islands == 1 and cfg.pop_axes is not None
@@ -106,9 +129,13 @@ class IslandOptimizer:
         exec_cfg = dataclasses.replace(
             self.exec_cfg, mesh_axis=cfg.pop_axes if pop_axis_shard else None
         )
-        evaluator = make_batch_evaluator(f, exec_cfg, self.mesh if pop_axis_shard else None)
+        return make_batch_evaluator(f, exec_cfg, self.mesh if pop_axis_shard else None)
+
+    def _build(self, f: Function) -> MetaHeuristic:
+        cfg = self.cfg
         return self.algo_maker(
-            f=f, evaluator=evaluator, pop=cfg.pop, dim=cfg.dim, **self.params
+            f=f, evaluator=self._evaluator(f), pop=cfg.pop, dim=cfg.dim,
+            **self.params
         )
 
     def _round_fn(self, algo: MetaHeuristic) -> Callable[[State, Array], State]:
@@ -146,19 +173,61 @@ class IslandOptimizer:
 
         return round_fn
 
-    def _run_fn(self, algo: MetaHeuristic) -> Callable[[State, Array], tuple[Array, Array, Array]]:
-        """Whole-run device program: scan over sync rounds, select the global
-        incumbent on device, return ``(best_arg, best_val, history)``."""
+    def _polish(self, f: Function) -> tuple[Callable[[State], State] | None, int]:
+        """(state -> state polish pass, evals per polished point) — the hybrid
+        memetic layer (DESIGN.md §6), or ``(None, 0)`` when ``cfg.polish`` is
+        off. The pass takes each island's ``polish_topk`` best candidates
+        through a fixed-shape batched local descent (``optim.descent
+        .make_polish``) and writes improvements back into the population and
+        the incumbent. It reuses the SAME cached evaluator as the generation
+        steps (``make_batch_evaluator`` memoizes on objective + config), so
+        polish probes hit the identical xla/pallas backend. Deterministic —
+        no RNG — so it cannot perturb the engine's key chain.
+        """
+        cfg = self.cfg
+        if cfg.polish == "none":
+            return None, 0
+        from repro.optim import descent  # late: optim.descent imports core.api
+
+        pcfg = descent.PolishConfig(method=cfg.polish, steps=cfg.polish_steps)
+        polish = descent.make_polish(f, self._evaluator(f), cfg.dim, pcfg)
+        k = min(cfg.polish_topk, cfg.pop)
+
+        def polish_island(state: State) -> State:
+            pop, fit = state["pop"], state["fit"]
+            _, idx = jax.lax.top_k(-fit, k)        # k best (smallest) fitness
+            xs, fs = pop[idx], fit[idx]
+            xs2, fs2 = polish(xs, fs)
+            better = fs2 < fs                      # polish is monotone; guard anyway
+            pop = pop.at[idx].set(jnp.where(better[:, None], xs2, xs))
+            fit = fit.at[idx].set(jnp.where(better, fs2, fs))
+            return track_best(state, pop, fit)
+
+        pass_fn = jax.vmap(polish_island) if cfg.n_islands > 1 else polish_island
+        return pass_fn, descent.polish_evals_per_point(cfg.dim, pcfg)
+
+    def _run_fn(
+        self, algo: MetaHeuristic, polish_pass: Callable[[State], State] | None = None,
+    ) -> Callable[[State, Array], tuple[Array, Array, Array]]:
+        """Whole-run device program: scan over sync rounds (polishing on the
+        ``polish_every`` cadence), select the global incumbent on device,
+        return ``(best_arg, best_val, history)``."""
         stacked = self.cfg.n_islands > 1
+        every = max(1, self.cfg.polish_every)
         round_fn = self._round_fn(algo)
 
         def run(state: State, round_keys: Array) -> tuple[Array, Array, Array]:
-            def body(carry: State, rk: Array) -> tuple[State, Array]:
+            def body(carry: State, xs: tuple[Array, Array]) -> tuple[State, Array]:
+                rk, r = xs
                 carry = round_fn(carry, rk)
+                if polish_pass is not None:
+                    carry = jax.lax.cond(
+                        (r + 1) % every == 0, polish_pass, lambda s: s, carry)
                 bv = carry["best_val"]
                 return carry, (jnp.min(bv) if stacked else bv)
 
-            state, history = jax.lax.scan(body, state, round_keys)
+            rs = jnp.arange(round_keys.shape[0])
+            state, history = jax.lax.scan(body, state, (round_keys, rs))
             arg, val = _select_best(state, stacked)
             return arg, val, history
 
@@ -175,34 +244,64 @@ class IslandOptimizer:
 
         return jax.tree.map(put, state)
 
-    def _budget(self, algo: MetaHeuristic) -> tuple[int, int]:
-        """(n_rounds, per_round_evals) from the eval budget — one accounting
-        rule shared by minimize and minimize_many."""
+    def _budget(self, algo: MetaHeuristic,
+                polish_per_point: int = 0) -> tuple[int, int, int, int]:
+        """(n_rounds, per_round_evals, n_polish, per_polish_evals) from the
+        eval budget — one accounting rule shared by minimize and
+        minimize_many. Polish events fire every ``polish_every`` rounds and
+        cost ``polish_topk * polish_per_point`` per island, charged against
+        the same ``max_evals`` as generation steps, so hybrid runs stay
+        budget-comparable with plain ones."""
         cfg = self.cfg
         per_round = algo.evals_per_gen * cfg.n_islands * cfg.sync_every
         budget = cfg.max_evals - algo.init_evals * cfg.n_islands
-        return max(1, budget // max(per_round, 1)), per_round
+        if polish_per_point <= 0 or cfg.polish == "none":
+            return max(1, budget // max(per_round, 1)), per_round, 0, 0
+        # top-k is clamped to the island population in _polish; charge the same
+        per_polish = polish_per_point * min(cfg.polish_topk, cfg.pop) * cfg.n_islands
+        every = max(1, cfg.polish_every)
 
-    def _single_fn(self, f: Function) -> tuple[MetaHeuristic, Callable]:
-        """Cached (algo, jitted device-resident run) for ``f`` — repeated
-        ``minimize`` calls on one optimizer reuse the compiled program instead
-        of re-tracing a fresh closure every call."""
+        def cost(n: int) -> int:
+            return n * per_round + (n // every) * per_polish
+
+        lo, hi = 1, max(1, budget // max(per_round, 1))
+        while lo < hi:                      # largest n_rounds with cost <= budget
+            mid = (lo + hi + 1) // 2
+            if cost(mid) <= budget:
+                lo = mid
+            else:
+                hi = mid - 1
+        return lo, per_round, lo // every, per_polish
+
+    def _single_fn(self, f: Function) -> tuple[MetaHeuristic, Callable, int]:
+        """Cached (algo, jitted device-resident run, polish evals/point) for
+        ``f`` — repeated ``minimize`` calls on one optimizer reuse the
+        compiled program instead of re-tracing a fresh closure every call."""
         ck = ("single", f.name, id(f.fn), id(f.shift), f.bias)
         hit = self._many_cache.get(ck)
         if hit is not None and hit[0] is f.fn:
-            return hit[1], hit[2]
+            return hit[1], hit[2], hit[3]
         algo = self._build(f)
-        run = jax.jit(self._run_fn(algo), donate_argnums=0)
-        self._many_cache[ck] = (f.fn, algo, run)
-        return algo, run
+        polish_pass, pp = self._polish(f)
+        run = jax.jit(self._run_fn(algo, polish_pass), donate_argnums=0)
+        self._many_cache[ck] = (f.fn, algo, run, pp)
+        return algo, run, pp
 
     def minimize(self, f: Function, key: Array) -> OptimizeResult:
+        """Run the full eval budget on objective ``f`` from PRNG ``key``.
+
+        Device-resident (one jitted scan, one host transfer) unless
+        ``round_callback`` is set; either path yields the same trajectory for
+        a fixed key — including the polish cadence when ``cfg.polish`` is on.
+        """
         cfg = self.cfg
         if self.round_callback is None:
-            algo, run = self._single_fn(f)
+            algo, run, pp = self._single_fn(f)
+            polish_pass = None
         else:
             algo, run = self._build(f), None
-        n_rounds, per_round = self._budget(algo)
+            polish_pass, pp = self._polish(f)
+        n_rounds, per_round, n_polish, per_polish = self._budget(algo, pp)
 
         key, ik = jax.random.split(key)
         if cfg.n_islands > 1:
@@ -220,10 +319,17 @@ class IslandOptimizer:
                 arg, val, history = jax.device_get(run(state, round_keys))
             else:
                 # Host-stepped path: round granularity for checkpoint/coupling.
+                # Polish applies on the same cadence, BEFORE the history/
+                # callback read, mirroring the device-resident scan body.
                 round_jit = jax.jit(self._round_fn(algo), donate_argnums=0)
+                polish_jit = (jax.jit(polish_pass, donate_argnums=0)
+                              if polish_pass is not None else None)
+                every = max(1, cfg.polish_every)
                 history = []
                 for r in range(n_rounds):
                     state = round_jit(state, round_keys[r])
+                    if polish_jit is not None and (r + 1) % every == 0:
+                        state = polish_jit(state)
                     bv = state["best_val"]
                     gval = jnp.min(bv) if cfg.n_islands > 1 else bv
                     history.append(float(gval))
@@ -231,7 +337,8 @@ class IslandOptimizer:
                 arg, val = _select_best(state, cfg.n_islands > 1)
                 history = np.asarray(history, dtype=np.float32)
 
-        n_evals = algo.init_evals * cfg.n_islands + n_rounds * per_round
+        n_evals = (algo.init_evals * cfg.n_islands + n_rounds * per_round
+                   + n_polish * per_polish)
         return OptimizeResult(
             arg=arg, value=float(val), n_evals=n_evals,
             n_gens=n_rounds * cfg.sync_every, history=history,
@@ -239,9 +346,10 @@ class IslandOptimizer:
 
     # -- jobs axis ---------------------------------------------------------
 
-    def _many_fn(self, f: Function) -> tuple[MetaHeuristic, Callable]:
+    def _many_fn(self, f: Function) -> tuple[MetaHeuristic, Callable, int]:
         """Compiled jobs-axis runner for objective ``f``: ``keys (J, 2) ->
-        (args (J, dim), vals (J,), histories (J, n_rounds))``.
+        (args (J, dim), vals (J,), histories (J, n_rounds))``, plus the
+        polish evals/point for budget accounting.
 
         Each job replays ``minimize``'s exact device program — the same
         ``split``/``_chain_split`` key discipline, init, round scan and
@@ -253,12 +361,13 @@ class IslandOptimizer:
         ck = (f.name, id(f.fn), id(f.shift), f.bias)
         hit = self._many_cache.get(ck)
         if hit is not None and hit[0] is f.fn:
-            return hit[1], hit[2]
+            return hit[1], hit[2], hit[3]
 
         cfg = self.cfg
         algo = self._build(f)
-        n_rounds, _ = self._budget(algo)
-        run = self._run_fn(algo)
+        polish_pass, pp = self._polish(f)
+        n_rounds, _, _, _ = self._budget(algo, pp)
+        run = self._run_fn(algo, polish_pass)
         stacked = cfg.n_islands > 1
 
         def one_job(k: Array) -> tuple[Array, Array, Array]:
@@ -270,8 +379,8 @@ class IslandOptimizer:
             return run(state, _chain_split(key, n_rounds))
 
         many = jax.jit(jax.vmap(one_job))
-        self._many_cache[ck] = (f.fn, algo, many)
-        return algo, many
+        self._many_cache[ck] = (f.fn, algo, many, pp)
+        return algo, many, pp
 
     def minimize_many(self, f: Function, keys: Array) -> list[OptimizeResult]:
         """Run one job per row of ``keys (J, 2)`` in a single jitted dispatch.
@@ -285,8 +394,8 @@ class IslandOptimizer:
         if self.round_callback is not None:
             raise ValueError("minimize_many is device-resident only; "
                              "round_callback requires per-job minimize calls")
-        algo, many = self._many_fn(f)
-        n_rounds, per_round = self._budget(algo)
+        algo, many, pp = self._many_fn(f)
+        n_rounds, per_round, n_polish, per_polish = self._budget(algo, pp)
 
         keys = jnp.asarray(keys)
         n_jobs = keys.shape[0]
@@ -307,7 +416,8 @@ class IslandOptimizer:
         with ctx:
             args, vals, hists = jax.device_get(many(keys))
 
-        n_evals = algo.init_evals * cfg.n_islands + n_rounds * per_round
+        n_evals = (algo.init_evals * cfg.n_islands + n_rounds * per_round
+                   + n_polish * per_polish)
         return [
             OptimizeResult(
                 arg=args[j], value=float(vals[j]), n_evals=n_evals,
@@ -350,10 +460,12 @@ class _nullcontext:
 
 
 def uniform_init(key: Array, pop: int, dim: int, lo: float, hi: float) -> Array:
+    """Uniform-random (pop, dim) population in the box — the shared init."""
     return jax.random.uniform(key, (pop, dim), minval=lo, maxval=hi, dtype=jnp.float32)
 
 
 def clip_box(x: Array, lo: float, hi: float) -> Array:
+    """Project candidates back into the box domain (the paper's constraint)."""
     return jnp.clip(x, lo, hi)
 
 

@@ -21,6 +21,7 @@ def make(
     pop: int,
     dim: int,
 ) -> MetaHeuristic:
+    """Pure Monte-Carlo sampling policy — the paper's MCS baseline."""
     lo, hi = f.lo, f.hi
 
     def init(key: Array) -> State:

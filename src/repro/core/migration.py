@@ -88,6 +88,7 @@ def starvation(pop: Array, fit: Array, k: int = 2, alive: Array | None = None):
 
 
 def migrate(policy: str, pop: Array, fit: Array, k: int = 2, alive: Array | None = None):
+    """Dispatch to a migration policy by name: ring | starvation | none."""
     if policy == "ring":
         return ring(pop, fit, k)
     if policy == "starvation":

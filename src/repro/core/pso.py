@@ -28,6 +28,7 @@ def make(
     fg: float = 1.0,
     vmax_frac: float = 0.2,
 ) -> MetaHeuristic:
+    """Particle Swarm per-island policy (inertia w, cognitive fp, social fg)."""
     lo, hi = f.lo, f.hi
     vmax = vmax_frac * (hi - lo)
 

@@ -36,6 +36,7 @@ def make(
     n_gens_hint: int = 10_000,   # horizon for the linear schedule
     step_frac: float = 0.1,      # proposal sigma as a fraction of the box width
 ) -> MetaHeuristic:
+    """Simulated Annealing per-island policy (population of parallel chains)."""
     lo, hi = f.lo, f.hi
     sched = SCHEDULES[schedule]
     sigma = step_frac * (hi - lo)

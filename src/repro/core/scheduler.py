@@ -12,6 +12,11 @@ leading *jobs* axis over the engine state (``IslandOptimizer.minimize_many``).
 compilation instead of N, because the per-bucket optimizer (and its evaluator,
 via the executor cache) is reused across flushes.
 
+Hybrid memetic requests (``OptRequest.polish != "none"``, DESIGN.md §6) bucket
+separately from plain ones: the polish fields are part of the shape-class, so
+a mixed hybrid/plain traffic stream can never collide two different compiled
+programs into one bucket.
+
 POLO-style policy/execution separation: the algorithms never learn whether
 they ran standalone, under the scheduler, or sharded over a mesh.
 """
@@ -72,6 +77,7 @@ class ShapeBucketScheduler:
     # -- submission --------------------------------------------------------
 
     def submit(self, req: OptRequest, job_id: str | None = None) -> str:
+        """Queue a job into its shape-class bucket; returns its job id."""
         if job_id is None:
             job_id = f"job{next(self._ids)}"
             while job_id in self._jobs:    # skip ids a client claimed itself
@@ -114,7 +120,9 @@ class ShapeBucketScheduler:
                 n_islands=req.n_islands, pop=req.pop, dim=req.dim,
                 sync_every=req.sync_every, migration=req.migration,
                 n_migrants=req.n_migrants, share_incumbent=req.share_incumbent,
-                max_evals=req.max_evals,
+                max_evals=req.max_evals, polish=req.polish,
+                polish_every=req.polish_every, polish_topk=req.polish_topk,
+                polish_steps=req.polish_steps,
             )
             opt = IslandOptimizer(
                 ALGORITHMS[req.algo], cfg, params=dict(req.params),
@@ -173,6 +181,7 @@ class ShapeBucketScheduler:
     # -- retrieval ---------------------------------------------------------
 
     def poll(self, job_id: str) -> OptResponse:
+        """Non-blocking status lookup; never triggers a bucket run."""
         return self._jobs[job_id].response
 
     def result(self, job_id: str, evict: bool = False) -> OptResponse:
@@ -190,6 +199,7 @@ class ShapeBucketScheduler:
         return job.response
 
     def stats(self) -> dict[str, int]:
+        """Queue/dispatch counters for the service's ``stats`` op."""
         return {
             "submitted": len(self._jobs),
             "pending": sum(len(v) for v in self._pending.values()),

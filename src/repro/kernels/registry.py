@@ -31,11 +31,13 @@ _REGISTRY: dict[str, KernelSpec] = {}
 
 
 def register(spec: KernelSpec) -> KernelSpec:
+    """Add (or replace) a function's kernel spec; returns it for chaining."""
     _REGISTRY[spec.name] = spec
     return spec
 
 
 def supported(name: str) -> bool:
+    """True when a Pallas kernel is registered for function ``name``."""
     return name in _REGISTRY
 
 
@@ -45,6 +47,7 @@ def registered() -> tuple[str, ...]:
 
 
 def get_spec(name: str) -> KernelSpec:
+    """Kernel spec for ``name``; KeyError (with guidance) if unregistered."""
     try:
         return _REGISTRY[name]
     except KeyError:

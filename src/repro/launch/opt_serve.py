@@ -15,6 +15,14 @@ One JSON object per line (JSONL), over stdin/stdout (default) or TCP
     {"op": "stats"}                   -> scheduler + queue counters
     {"op": "quit"}                    -> {"bye": true}
 
+Hybrid memetic jobs (DESIGN.md §6) are plain requests with polish fields —
+they bucket separately from plain jobs because polish parameters join the
+compiled shape-class:
+
+    {"op": "submit", "request": {"fn": "rosenbrock", "dim": 12, "max_evals": 20000,
+                                 "polish": "asd", "polish_every": 3,
+                                 "polish_topk": 2, "polish_steps": 2, "seed": 0}}
+
 Batching policy (host-side queue): a bucket is dispatched when it reaches
 ``--max-batch`` queued jobs, when its oldest job ages past the ``--flush-ms``
 deadline, or when a client forces it via ``result``/``flush``. Everything the

@@ -1,4 +1,6 @@
 from repro.optim import adam  # noqa: F401
 from repro.optim.adam import AdamConfig, AdamState  # noqa: F401
-from repro.optim.descent import DescentConfig, asd, avd, bfgs, fcg  # noqa: F401
+from repro.optim.descent import (  # noqa: F401
+    DescentConfig, PolishConfig, asd, avd, bfgs, fcg, make_polish,
+    polish_evals_per_point)
 from repro.optim.numgrad import make_grad, richardson_grad  # noqa: F401

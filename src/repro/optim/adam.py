@@ -25,6 +25,9 @@ PyTree = Any
 
 @dataclasses.dataclass(frozen=True)
 class AdamConfig:
+    """Pytree-Adam hyperparameters: moments, decoupled weight decay,
+    global-norm clip and the warmup+cosine learning-rate schedule."""
+
     lr: float = 3e-4
     b1: float = 0.9
     b2: float = 0.999
@@ -37,12 +40,15 @@ class AdamConfig:
 
 
 class AdamState(NamedTuple):
+    """Optimizer state: step count plus first/second moment pytrees."""
+
     step: Array
     mu: PyTree
     nu: PyTree
 
 
 def init(params: PyTree) -> AdamState:
+    """Zero-initialized AdamState shaped like ``params`` (f32 moments)."""
     zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
     return AdamState(step=jnp.zeros((), jnp.int32), mu=zeros,
                      nu=jax.tree.map(jnp.copy, zeros))
@@ -59,6 +65,7 @@ def schedule(step: Array, cfg: AdamConfig) -> Array:
 
 def update(grads: PyTree, state: AdamState, params: PyTree,
            cfg: AdamConfig) -> tuple[PyTree, AdamState]:
+    """One Adam(W) step: returns (new_params, new_state); pure and shardable."""
     step = state.step + 1
     if cfg.grad_clip > 0:
         gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
@@ -94,6 +101,7 @@ def adam_minimize(f: Function, key: Array, dim: int, max_evals: int = 100_000,
                   lr: float = 0.05, grad_mode: str = "richardson",
                   b1: float = 0.9, b2: float = 0.999,
                   eps: float = 1e-8) -> OptimizeResult:
+    """Budget-capped Adam on a FunctionIntf objective (Fig.4 protocol)."""
     lo, hi = f.lo, f.hi
     grad_fn = make_grad(f.fn, grad_mode)
 

@@ -6,7 +6,7 @@
         (the paper's Fletcher bracketing/sectioning line search with params
         rho, sigma, t1, t2, t3 is realized here as Armijo backtracking — same
         sufficient-decrease acceptance, simpler bracketing; deviation recorded
-        in DESIGN.md §9)
+        in DESIGN.md §6)
   AVD   alternating-variables descent with expanding coordinate probes and
         optional quantization of variables (box + discrete sets)
   BFGS  Newton's method with dense BFGS updates + Armijo steps
@@ -15,6 +15,19 @@ All methods are budget-capped in *function evaluations* (Fig.4 protocol) and use
 Richardson numeric gradients by default (4D evals per gradient, charged to the
 budget exactly as the paper does). Whole runs are single jitted
 ``lax.while_loop``s — one XLA program per (method, function, dim).
+
+The module has two faces (popt4jlib ``LocalOptimizerIntf``):
+
+* standalone optimizers (``asd``/``fcg``/``avd``/``bfgs`` above) — multistart,
+  budget-driven ``while_loop`` runs for Fig.4-style experiments;
+* the **batched polish layer** (``PolishConfig`` / ``make_polish``) — a
+  fixed-iteration, fixed-shape, deterministic variant of the same four methods
+  that refines a ``(K, dim)`` batch of candidates in one shot. It is jit-,
+  vmap- and scan-safe (no data-dependent shapes, no host syncs, no RNG), routes
+  every probe and line-search trial through a pluggable batch evaluator (the
+  engine's xla/pallas EvalBackend), and has a statically known eval cost
+  (``polish_evals_per_point``) so the island engine can charge polish work to
+  the run budget exactly. This is the hybrid memetic layer of DESIGN.md §6.
 """
 from __future__ import annotations
 
@@ -33,6 +46,9 @@ Array = jax.Array
 
 @dataclasses.dataclass(frozen=True)
 class DescentConfig:
+    """Standalone descent-run parameters: eval budget, Armijo line search,
+    gradient cost model and the AVD quantization/probe controls."""
+
     max_evals: int = 100_000
     rho: float = 0.1          # Armijo sufficient-decrease
     beta: float = 0.8         # Armijo backtracking factor
@@ -142,12 +158,207 @@ def _directional(f: Function, key: Array, dim: int, cfg: DescentConfig,
 
 def asd(f: Function, key: Array, dim: int,
         cfg: DescentConfig = DescentConfig()) -> OptimizeResult:
+    """ArmijoSteepestDescent: multistart steepest descent, budget-capped."""
     return _directional(f, key, dim, cfg, "asd")
 
 
 def fcg(f: Function, key: Array, dim: int,
         cfg: DescentConfig = DescentConfig()) -> OptimizeResult:
+    """FletcherConjugateGradient: multistart nonlinear CG (FR or PR+)."""
     return _directional(f, key, dim, cfg, "fcg")
+
+
+# ---------------------------------------------------------------------------
+# Batched polish layer — popt4jlib LocalOptimizerIntf inside the island engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PolishConfig:
+    """Fixed-shape local-descent polish of a candidate batch (DESIGN.md §6).
+
+    Unlike :class:`DescentConfig` runs, a polish is *iteration*-capped, not
+    budget-capped: ``steps`` descent iterations, each costing a statically
+    known number of evaluations (see :func:`polish_evals_per_point`), so the
+    engine can account polish work against its eval budget before tracing.
+    The backtracking ``while_loop`` of ``_armijo`` becomes a *ladder*: all
+    ``n_ladder`` trial steps are evaluated as one batch through the evaluator
+    (one fused backend call instead of a sequential loop), and the largest
+    Armijo-admissible step wins — falling back to the best improving trial,
+    or to the incumbent itself, so polish is monotone by construction.
+    """
+
+    method: str = "asd"       # asd | fcg | avd | bfgs
+    steps: int = 3            # descent iterations per polish call
+    n_ladder: int = 8         # line-search trial steps, gamma * beta^j
+    gamma: float = 1.0        # largest trial step (a distance: directions are
+                              # normalized, exactly like ``_armijo``)
+    beta: float = 0.5         # ladder decay
+    rho: float = 1e-4         # Armijo sufficient-decrease slope
+    grad_h: float = 1e-4      # Richardson probe step
+    avd_span: float = 0.1     # AVD: largest probe, as a fraction of (hi - lo)
+
+    def __post_init__(self) -> None:
+        if self.method not in ("asd", "fcg", "avd", "bfgs"):
+            raise ValueError(f"unknown polish method {self.method!r}")
+
+
+def polish_evals_per_point(dim: int, cfg: PolishConfig) -> int:
+    """Function evaluations one polished point costs — exact, by construction.
+
+    Gradient methods: per step, one Richardson gradient (4·dim probes) plus
+    ``n_ladder`` line-search trials. AVD: per step, a ±ladder probe on every
+    coordinate (2·dim·n_ladder), from which the single best move is taken.
+    """
+    if cfg.method == "avd":
+        return cfg.steps * 2 * dim * cfg.n_ladder
+    return cfg.steps * (4 * dim + cfg.n_ladder)
+
+
+def _batched_richardson(evaluate, x: Array, h: float) -> Array:
+    """Richardson 4th-order gradients for a (K, D) batch, all 4·K·D probe
+    points in ONE evaluator call — the polish analogue of ``richardson_grad``
+    that hits the engine's xla/pallas backend instead of a raw vmap."""
+    K, D = x.shape
+    eye = jnp.eye(D, dtype=x.dtype)
+    probes = jnp.concatenate([
+        x[:, None, :] + h * eye, x[:, None, :] - h * eye,
+        x[:, None, :] + 2 * h * eye, x[:, None, :] - 2 * h * eye,
+    ], axis=1)                                            # (K, 4D, D)
+    vals = evaluate(probes.reshape(K * 4 * D, D)).reshape(K, 4, D)
+    fp, fm, fp2, fm2 = vals[:, 0], vals[:, 1], vals[:, 2], vals[:, 3]
+    return (8.0 * (fp - fm) - (fp2 - fm2)) / (12.0 * h)
+
+
+def _ladder_search(evaluate, x: Array, fx: Array, g: Array, d: Array,
+                   lo: float, hi: float, cfg: PolishConfig) -> tuple[Array, Array]:
+    """Batched Armijo ladder along per-row directions ``d``.
+
+    Evaluates the whole geometric ladder ``gamma·beta^j`` at once, accepts the
+    largest admissible step per row (or the best improving trial when none
+    passes Armijo — box clipping can break the slope condition near a bound),
+    and never moves a row uphill."""
+    K, D = x.shape
+    L = cfg.n_ladder
+    dn = d / jnp.maximum(jnp.linalg.norm(d, axis=-1, keepdims=True), 1e-30)
+    gd = jnp.sum(g * dn, axis=-1)                          # (K,)
+    ts = cfg.gamma * cfg.beta ** jnp.arange(L, dtype=x.dtype)
+    cand = jnp.clip(x[:, None, :] + ts[None, :, None] * dn[:, None, :], lo, hi)
+    fc = evaluate(cand.reshape(K * L, D)).reshape(K, L)
+    ok = fc <= fx[:, None] + cfg.rho * ts[None, :] * gd[:, None]
+    j = jnp.where(jnp.any(ok, axis=1), jnp.argmax(ok, axis=1),
+                  jnp.argmin(fc, axis=1))
+    xj = jnp.take_along_axis(cand, j[:, None, None], axis=1)[:, 0]
+    fj = jnp.take_along_axis(fc, j[:, None], axis=1)[:, 0]
+    better = fj < fx
+    return jnp.where(better[:, None], xj, x), jnp.where(better, fj, fx)
+
+
+def make_polish(f: Function, evaluate, dim: int,
+                cfg: PolishConfig = PolishConfig()):
+    """Build ``polish(xs (K, dim), fs (K,)) -> (xs', fs')`` for objective ``f``.
+
+    The returned callable is pure, deterministic and fixed-shape: safe inside
+    ``jit``/``vmap``/``scan`` (the island engine calls it from inside its
+    jitted round scan, vmapped over islands and again over jobs). ``evaluate``
+    is a ``(N, dim) -> (N,)`` batch evaluator — pass the engine's
+    ``make_batch_evaluator`` product so polish probes hit the same xla/pallas
+    backend as generation steps, or ``None`` for a plain vmap of ``f.fn``.
+
+    ASD/FCG(FR)/BFGS carry direction/curvature memory across the ``steps``
+    iterations of one call and restart fresh each call; AVD is realized as a
+    greedy best-single-coordinate-move per step (the batched analogue of one
+    sweep — the sequential coordinate loop of :func:`avd` does not vectorize
+    over a candidate batch; deviation noted in DESIGN.md §6).
+    """
+    if evaluate is None:
+        evaluate = jax.vmap(f.fn)
+    lo, hi = f.lo, f.hi
+    L = cfg.n_ladder
+
+    if cfg.method == "avd":
+        span = cfg.avd_span * (hi - lo)
+
+        def polish_avd(xs: Array, fs: Array) -> tuple[Array, Array]:
+            K, D = xs.shape
+            ts = span * cfg.beta ** jnp.arange(L, dtype=xs.dtype)   # (L,)
+            eye = jnp.eye(D, dtype=xs.dtype)
+            # (K, D, 2, L, D): per point, per coordinate, ± each ladder step
+            moves = eye[None, :, None, None, :] * ts[None, None, None, :, None]
+            moves = moves * jnp.asarray([1.0, -1.0], xs.dtype)[None, None, :, None, None]
+
+            def step(carry: tuple[Array, Array], _: None):
+                x, fx = carry
+                cand = jnp.clip(x[:, None, None, None, :] + moves, lo, hi)
+                fc = evaluate(cand.reshape(K * D * 2 * L, D)).reshape(K, D * 2 * L)
+                j = jnp.argmin(fc, axis=1)
+                fj = jnp.take_along_axis(fc, j[:, None], axis=1)[:, 0]
+                xj = jnp.take_along_axis(
+                    cand.reshape(K, D * 2 * L, D), j[:, None, None], axis=1)[:, 0]
+                better = fj < fx
+                return (jnp.where(better[:, None], xj, x),
+                        jnp.where(better, fj, fx)), None
+
+            (xs, fs), _ = jax.lax.scan(step, (xs, fs), None, length=cfg.steps)
+            return xs, fs
+
+        return polish_avd
+
+    method = cfg.method
+
+    def polish_grad(xs: Array, fs: Array) -> tuple[Array, Array]:
+        # The scan carry holds only what the method reads — at dim=1000 a
+        # dense (K, D, D) BFGS matrix is 4*K MB, so asd/fcg must not drag it
+        # through the engine's round scan (and its islands/jobs vmaps).
+        K, D = xs.shape
+
+        def step(carry, _: None):
+            if method == "fcg":
+                x, fx, d_prev, gg_prev = carry
+            elif method == "bfgs":
+                x, fx, x_prev, g_prev, H = carry
+            else:                          # asd
+                x, fx = carry
+            g = _batched_richardson(evaluate, x, cfg.grad_h)
+            if method == "fcg":
+                gg = jnp.sum(g * g, axis=-1)
+                b = gg / gg_prev           # first step: gg_prev = inf -> b = 0
+                d = -g + b[:, None] * d_prev
+                dg = jnp.sum(d * g, axis=-1)
+                d = jnp.where((dg < 0)[:, None], d, -g)    # keep descent
+            elif method == "bfgs":
+                I = jnp.broadcast_to(jnp.eye(D, dtype=x.dtype), (K, D, D))
+                s, y = x - x_prev, g - g_prev
+                sy = jnp.sum(s * y, axis=-1)
+                ok = sy > 1e-10            # first step: s = 0 -> H stays I
+                r = jnp.where(ok, 1.0 / jnp.where(ok, sy, 1.0), 0.0)
+                V = I - r[:, None, None] * s[:, :, None] * y[:, None, :]
+                H1 = (V @ H @ jnp.swapaxes(V, 1, 2)
+                      + r[:, None, None] * s[:, :, None] * s[:, None, :])
+                H = jnp.where(ok[:, None, None], H1, H)
+                d = -jnp.einsum("kij,kj->ki", H, g)
+                dg = jnp.sum(d * g, axis=-1)
+                d = jnp.where((dg < 0)[:, None], d, -g)
+            else:                          # asd
+                d = -g
+            x1, f1 = _ladder_search(evaluate, x, fx, g, d, lo, hi, cfg)
+            if method == "fcg":
+                return (x1, f1, d, gg), None
+            if method == "bfgs":
+                return (x1, f1, x, g, H), None
+            return (x1, f1), None
+
+        if method == "fcg":
+            carry0 = (xs, fs, jnp.zeros_like(xs),
+                      jnp.full((K,), jnp.inf, xs.dtype))
+        elif method == "bfgs":
+            carry0 = (xs, fs, xs, jnp.zeros_like(xs),
+                      jnp.broadcast_to(jnp.eye(D, dtype=xs.dtype), (K, D, D)))
+        else:
+            carry0 = (xs, fs)
+        (xs, fs, *_), _ = jax.lax.scan(step, carry0, None, length=cfg.steps)
+        return xs, fs
+
+    return polish_grad
 
 
 # ---------------------------------------------------------------------------
@@ -222,6 +433,7 @@ def avd(f: Function, key: Array, dim: int,
 
 def bfgs(f: Function, key: Array, dim: int,
          cfg: DescentConfig = DescentConfig()) -> OptimizeResult:
+    """Quasi-Newton descent with dense BFGS updates + Armijo steps."""
     lo, hi = f.lo, f.hi
     grad_fn = make_grad(f.fn, cfg.grad_mode)
 

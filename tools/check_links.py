@@ -1,11 +1,12 @@
 """Markdown link check (stdlib-only, offline): every relative link/image in
 the given files must resolve to an existing file or directory.
 
-    python tools/check_links.py README.md DESIGN.md CHANGES.md
+    python tools/check_links.py README.md DESIGN.md CHANGES.md docs
 
-Checks ``[text](target)`` and ``![alt](target)``. External (``http(s)://``,
-``mailto:``) and pure-anchor (``#...``) targets are skipped — CI stays
-hermetic. Exits non-zero listing every broken target.
+Arguments may be files or directories; a directory is scanned recursively
+for ``*.md``. Checks ``[text](target)`` and ``![alt](target)``. External
+(``http(s)://``, ``mailto:``) and pure-anchor (``#...``) targets are skipped
+— CI stays hermetic. Exits non-zero listing every broken target.
 """
 from __future__ import annotations
 
@@ -35,18 +36,26 @@ def check_file(path: Path) -> list[str]:
 
 def main(argv: list[str]) -> int:
     if not argv:
-        print("usage: check_links.py FILE.md [FILE.md ...]", file=sys.stderr)
+        print("usage: check_links.py FILE.md|DIR [...]", file=sys.stderr)
         return 2
     errors: list[str] = []
+    files: list[Path] = []
     for name in argv:
         p = Path(name)
-        if not p.exists():
+        if p.is_dir():
+            found = sorted(p.rglob("*.md"))
+            if not found:
+                errors.append(f"{name}: directory holds no .md files")
+            files.extend(found)
+        elif p.exists():
+            files.append(p)
+        else:
             errors.append(f"{name}: file not found")
-            continue
+    for p in files:
         errors.extend(check_file(p))
     for e in errors:
         print(e, file=sys.stderr)
-    print(f"[check_links] {len(argv)} files, {len(errors)} broken links")
+    print(f"[check_links] {len(files)} files, {len(errors)} broken links")
     return 1 if errors else 0
 
 

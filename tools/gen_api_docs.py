@@ -1,0 +1,180 @@
+"""Generate docs/API.md — the public-API reference for ``core/``, ``optim/``
+and ``kernels/registry`` — from the modules themselves (stdlib-only, offline).
+
+    PYTHONPATH=src python tools/gen_api_docs.py            # (re)write docs/API.md
+    PYTHONPATH=src python tools/gen_api_docs.py --check    # CI: fail if stale
+                                                           # or docstrings missing
+
+The reference lists every public symbol (classes with their public methods,
+functions, dataclasses with init signatures) defined in the covered modules,
+in source order, with its signature and first docstring paragraph. ``--check``
+enforces two invariants: the committed docs/API.md matches a fresh render
+(docs cannot drift from code), and every listed symbol has a docstring (the
+public surface stays documented).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import inspect
+import sys
+from pathlib import Path
+
+MODULES = (
+    "repro.core.api",
+    "repro.core.islands",
+    "repro.core.executor",
+    "repro.core.scheduler",
+    "repro.core.pipeline",
+    "repro.core.migration",
+    "repro.core.coupling",
+    "repro.core.de",
+    "repro.core.ga",
+    "repro.core.pso",
+    "repro.core.sa",
+    "repro.core.fa",
+    "repro.core.ea",
+    "repro.core.bh",
+    "repro.core.mc",
+    "repro.optim.descent",
+    "repro.optim.numgrad",
+    "repro.optim.adam",
+    "repro.kernels.registry",
+)
+
+OUT = Path(__file__).resolve().parents[1] / "docs" / "API.md"
+
+HEADER = """\
+# API reference
+
+Public surface of `core/`, `optim/` and `kernels/registry`, generated from
+the source by [`tools/gen_api_docs.py`](../tools/gen_api_docs.py) — do not
+edit by hand. Regenerate with:
+
+```bash
+PYTHONPATH=src python tools/gen_api_docs.py
+```
+
+CI runs `gen_api_docs.py --check`, which fails when this file is stale or a
+listed symbol is missing a docstring. Architecture context: [DESIGN.md](../DESIGN.md).
+"""
+
+
+def _first_paragraph(doc: str | None) -> str:
+    """First docstring paragraph, collapsed to one line ('' when absent)."""
+    if not doc:
+        return ""
+    lines = []
+    for line in inspect.cleandoc(doc).splitlines():
+        if not line.strip():
+            break
+        lines.append(line.strip())
+    return " ".join(lines)
+
+
+def _signature(obj) -> str:
+    try:
+        sig = str(inspect.signature(obj))
+    except (ValueError, TypeError):
+        return "(...)"
+    if inspect.isclass(obj) and sig.endswith(" -> None"):
+        sig = sig[: -len(" -> None")]       # dataclass __init__ noise
+    return sig
+
+
+def _public_members(mod) -> list[tuple[str, object]]:
+    """(name, obj) for classes/functions defined in ``mod``, source order."""
+    out = []
+    for name, obj in vars(mod).items():
+        if name.startswith("_"):
+            continue
+        if not (inspect.isclass(obj) or inspect.isfunction(obj)):
+            continue
+        if getattr(obj, "__module__", None) != mod.__name__:
+            continue
+        try:
+            line = inspect.getsourcelines(obj)[1]
+        except (OSError, TypeError):
+            line = 0
+        out.append((line, name, obj))
+    return [(n, o) for _, n, o in sorted(out)]
+
+
+def _class_methods(cls) -> list[tuple[str, object]]:
+    """Public methods defined directly on ``cls`` (not inherited), source order."""
+    out = []
+    for name, obj in vars(cls).items():
+        if name.startswith("_") or not inspect.isfunction(obj):
+            continue
+        out.append((inspect.getsourcelines(obj)[1], name, obj))
+    return [(n, o) for _, n, o in sorted(out)]
+
+
+def render(missing: list[str]) -> str:
+    parts = [HEADER]
+    for modname in MODULES:
+        __import__(modname)
+        mod = sys.modules[modname]
+        parts.append(f"\n## `{modname}`\n")
+        moddoc = _first_paragraph(mod.__doc__)
+        if moddoc:
+            parts.append(f"{moddoc}\n")
+        else:
+            missing.append(modname)
+        for name, obj in _public_members(mod):
+            qual = f"{modname}.{name}"
+            doc = _first_paragraph(obj.__doc__)
+            if inspect.isclass(obj):
+                kind = ("dataclass" if dataclasses.is_dataclass(obj)
+                        else "class")
+                parts.append(f"### {kind} `{name}{_signature(obj)}`\n")
+                # dataclasses inherit __doc__ from the auto-generated repr
+                # only when undocumented; treat the synthesized one as absent
+                if doc.startswith(f"{name}(") and obj.__doc__ == doc:
+                    doc = ""
+                if doc:
+                    parts.append(f"{doc}\n")
+                else:
+                    missing.append(qual)
+                for mname, mobj in _class_methods(obj):
+                    mdoc = _first_paragraph(mobj.__doc__)
+                    parts.append(f"- `{mname}{_signature(mobj)}` — {mdoc}\n")
+                    if not mdoc:
+                        missing.append(f"{qual}.{mname}")
+            else:
+                parts.append(f"### `{name}{_signature(obj)}`\n")
+                if doc:
+                    parts.append(f"{doc}\n")
+                else:
+                    missing.append(qual)
+    return "\n".join(parts)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--check", action="store_true",
+                    help="verify docs/API.md is current and fully documented")
+    ap.add_argument("--out", type=Path, default=OUT)
+    args = ap.parse_args()
+
+    missing: list[str] = []
+    text = render(missing)
+    if missing:
+        for sym in missing:
+            print(f"missing docstring: {sym}", file=sys.stderr)
+        return 1
+    if args.check:
+        if not args.out.exists() or args.out.read_text() != text:
+            print(f"{args.out} is stale — rerun tools/gen_api_docs.py",
+                  file=sys.stderr)
+            return 1
+        print(f"[gen_api_docs] {args.out} is current")
+        return 0
+    args.out.parent.mkdir(parents=True, exist_ok=True)
+    args.out.write_text(text)
+    print(f"[gen_api_docs] wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
