@@ -1,0 +1,137 @@
+"""Device-scaling benchmark for the sharded island engine (DESIGN.md §8).
+
+Runs the same island DE configuration with the island axis laid over 1, 2, 4
+and 8 devices (``core.mesh.MeshConfig``) and records *round throughput* —
+sync rounds per second of the compiled run, excluding compilation — plus the
+speedup over the 1-device (unsharded-engine) baseline. On a machine without
+accelerators the mesh is host-platform devices: the script sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` itself (before jax
+loads) unless the flag is already present, which is also how the CI
+distributed-smoke job runs it.
+
+Writes ``BENCH_distributed.json`` (the repo's scaling artifact; CI uploads
+the --smoke variant) and exits non-zero unless the widest mesh beats the
+1-device baseline by ``--min-speedup`` on at least one function.
+
+    PYTHONPATH=src python benchmarks/distributed.py            # full
+    PYTHONPATH=src python benchmarks/distributed.py --smoke    # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+MAX_DEVICES = 8
+_FLAG = "xla_force_host_platform_device_count"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + f" --{_FLAG}={MAX_DEVICES}").strip()
+
+import jax  # noqa: E402  (after XLA_FLAGS so host devices exist)
+
+from repro.core import ALGORITHMS, IslandConfig, IslandOptimizer, MeshConfig  # noqa: E402
+from repro.functions import get  # noqa: E402
+
+
+def time_devices(fn: str, devices: int, *, islands: int, pop: int, dim: int,
+                 sync_every: int, budget: int, repeats: int) -> dict:
+    """Median wall time of a compiled run on a ``devices``-wide mesh."""
+    f = get(fn, dim)
+    cfg = IslandConfig(n_islands=islands, pop=pop, dim=dim,
+                       sync_every=sync_every, migration="ring",
+                       max_evals=budget)
+    opt = IslandOptimizer(
+        ALGORITHMS["de"], cfg,
+        mesh_cfg=MeshConfig(devices=devices) if devices > 1 else None)
+    key = jax.random.PRNGKey(0)
+    res = opt.minimize(f, key)              # compile + warm the caches
+    n_rounds = res.n_gens // sync_every
+    walls = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        opt.minimize(f, key)
+        walls.append(time.perf_counter() - t0)
+    wall = sorted(walls)[len(walls) // 2]
+    return {
+        "devices": devices,
+        "wall_s": round(wall, 4),
+        "rounds_per_s": round(n_rounds / wall, 2),
+        "n_rounds": n_rounds,
+        "best": res.value,
+    }
+
+
+def bench(functions: list[str], device_counts: list[int], **sizes) -> list[dict]:
+    rows = []
+    for fn in functions:
+        base = None
+        for d in device_counts:
+            r = time_devices(fn, d, **sizes)
+            base = base or r["rounds_per_s"]
+            r["fn"] = fn
+            r["speedup"] = round(r["rounds_per_s"] / base, 3)
+            rows.append(r)
+            print(f"{fn:12s} devices={d}  {r['rounds_per_s']:9.2f} rounds/s  "
+                  f"({r['speedup']:.2f}x vs 1 device)")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: fewer rounds/repeats, widest mesh only")
+    ap.add_argument("--functions", nargs="+",
+                    default=["rastrigin", "rosenbrock"])
+    ap.add_argument("--islands", type=int, default=8)
+    ap.add_argument("--pop", type=int, default=512)
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--sync-every", type=int, default=10)
+    ap.add_argument("--rounds", type=int, default=60,
+                    help="sync rounds per timed run (sets the eval budget)")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--min-speedup", type=float, default=1.0,
+                    help="fail unless the widest mesh strictly beats this "
+                         "on at least one function")
+    ap.add_argument("--out", default="BENCH_distributed.json")
+    args = ap.parse_args()
+
+    n_dev = len(jax.devices())
+    counts = [d for d in (1, 2, 4, 8) if d <= min(n_dev, args.islands)]
+    if args.smoke:
+        args.rounds, args.repeats = 25, 2
+        counts = [1, counts[-1]] if counts[-1] > 1 else counts
+
+    budget = args.islands * args.pop * (args.rounds * args.sync_every + 1)
+    rows = bench(args.functions, counts,
+                 islands=args.islands, pop=args.pop, dim=args.dim,
+                 sync_every=args.sync_every, budget=budget,
+                 repeats=args.repeats)
+
+    widest = counts[-1]
+    best_by_fn = {fn: max(r["speedup"] for r in rows
+                          if r["fn"] == fn and r["devices"] == widest)
+                  for fn in args.functions}
+    best = max(best_by_fn.values())
+    rec = {
+        "algo": "de", "migration": "ring", "islands": args.islands,
+        "pop": args.pop, "dim": args.dim, "sync_every": args.sync_every,
+        "rounds": args.rounds, "device_counts": counts,
+        "backend": jax.default_backend(), "visible_devices": n_dev,
+        "smoke": args.smoke, "rows": rows,
+        "speedup_at_widest_by_fn": best_by_fn,
+        "best_speedup": best,
+    }
+    with open(args.out, "w") as fh:
+        json.dump(rec, fh, indent=2)
+        fh.write("\n")
+    print(f"\nbest {widest}-device speedup over the unsharded engine: "
+          f"{best:.2f}x -> {args.out}")
+    if best <= args.min_speedup:
+        raise SystemExit(
+            f"no function scaled past {args.min_speedup}x at {widest} devices")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,26 +1,37 @@
-"""§V.A reproduction driver: single-island DDE on CEC'2008 shifted
-Rosenbrock-1000 (pop 800, w=0.5, px=0.2, "non-determinism-ok").
+"""Distributed DE driver — the §V.A reproduction, now shardable (DESIGN.md §8).
 
-Paper reference points: best value 2972.1 after 20000 generations (f*=390);
-790.4 s single-threaded on a Xeon E5.
+Default configuration is the paper's single-island DDE on CEC'2008 shifted
+Rosenbrock-1000 (pop 800, w=0.5, px=0.2, "non-determinism-ok"); reference
+points: best value 2972.1 after 20000 generations (f*=390), 790.4 s
+single-threaded on a Xeon E5.
 
     PYTHONPATH=src python examples/distributed_de.py --gens 500     # quick
     PYTHONPATH=src python examples/distributed_de.py --gens 20000   # paper
+
+``--islands N --devices D`` switches to the sharded island engine: N islands
+with ring migration laid over D devices (``core.mesh.MeshConfig``), the round
+scan under ``shard_map`` and migration as a ``lax.ppermute`` ring. On a
+CPU-only machine the script forces D host-platform devices itself (the flag
+must be set before jax initializes):
+
+    PYTHONPATH=src python examples/distributed_de.py \
+        --islands 8 --devices 8 --dim 64 --pop 128 --gens 500
 """
 import argparse
+import os
 import time
 
-import jax
 
-from repro.core import ALGORITHMS, ExecutorConfig, IslandConfig, IslandOptimizer
-from repro.functions import make_shifted_rosenbrock
-
-
-def main() -> None:
-    ap = argparse.ArgumentParser()
+def parse_args() -> argparse.Namespace:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--dim", type=int, default=1000)
     ap.add_argument("--pop", type=int, default=800)
     ap.add_argument("--gens", type=int, default=500)
+    ap.add_argument("--islands", type=int, default=1,
+                    help=">1 runs the island engine with ring migration")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="devices the island axis shards over (DESIGN.md §8)")
+    ap.add_argument("--sync-every", type=int, default=10)
     ap.add_argument("--barrier", action="store_true",
                     help="enforce the determinism barrier (sync mode)")
     ap.add_argument("--backend", choices=("xla", "pallas"), default="xla",
@@ -28,29 +39,49 @@ def main() -> None:
     ap.add_argument("--fused", action="store_true",
                     help="run the whole DE generation in the fused Pallas "
                          "kernel (implies rand1bin; interpret mode off-TPU)")
-    args = ap.parse_args()
+    return ap.parse_args()
+
+
+def main(args: argparse.Namespace) -> None:
+    import jax
+
+    from repro.core import (ALGORITHMS, ExecutorConfig, IslandConfig,
+                            IslandOptimizer, MeshConfig)
+    from repro.functions import make_shifted_rosenbrock
 
     f = make_shifted_rosenbrock(args.dim)
-    cfg = IslandConfig(n_islands=1, pop=args.pop, dim=args.dim,
-                       migration="none", sync_every=10,
-                       max_evals=args.pop * (args.gens + 1))
+    cfg = IslandConfig(
+        n_islands=args.islands, pop=args.pop, dim=args.dim,
+        migration="ring" if args.islands > 1 else "none",
+        sync_every=args.sync_every,
+        max_evals=args.islands * args.pop * (args.gens + 1))
     params = {"w": 0.5, "px": 0.2,
               "barrier_mode": "sync" if args.barrier else "chunked"}
     if args.fused:
         params["fused"] = True
     opt = IslandOptimizer(
         ALGORITHMS["de"], cfg, params=params,
+        mesh_cfg=MeshConfig(devices=args.devices) if args.devices > 1 else None,
         exec_cfg=ExecutorConfig(backend=args.backend))
     t0 = time.time()
     res = opt.minimize(f, jax.random.PRNGKey(2008))
     wall = time.time() - t0
     mode = "fused" if args.fused else ("sync" if args.barrier else "chunked")
+    gens = res.n_gens
     print(f"DDE shifted-Rosenbrock d={args.dim} pop={args.pop} "
-          f"gens={res.n_gens} mode={mode} backend={args.backend}")
+          f"islands={args.islands} devices={args.devices} "
+          f"gens={gens} mode={mode} backend={args.backend}")
     print(f"best = {res.value:.1f}   (paper: 2972.1 @20k gens, optimum 390)")
-    print(f"wall = {wall:.1f}s  ({wall/max(res.n_gens,1)*1e3:.1f} ms/gen; "
+    print(f"wall = {wall:.1f}s  ({wall/max(gens,1)*1e3:.1f} ms/gen; "
           f"paper single-thread: 39.5 ms/gen)")
 
 
 if __name__ == "__main__":
-    main()
+    _args = parse_args()
+    _flag = "xla_force_host_platform_device_count"
+    if _args.devices > 1 and _flag not in os.environ.get("XLA_FLAGS", ""):
+        # Must land before jax initializes its backend, hence before main()'s
+        # imports — harmless when real accelerators already provide devices.
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                                   + f" --{_flag}={_args.devices}").strip()
+    main(_args)

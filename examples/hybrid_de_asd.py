@@ -1,4 +1,4 @@
-"""Hybrid memetic runs — DE+ASD three ways (DESIGN.md §6).
+"""Hybrid memetic runs — DE+ASD three ways (DESIGN.md §6–§7).
 
 1. In-scan hybrid: `IslandConfig.polish` runs a batched ASD polish of each
    island's best candidates inside the jitted round scan, on a cadence, with

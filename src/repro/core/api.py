@@ -64,8 +64,8 @@ class Optimizer(Protocol):
 
 SHAPE_CLASS_FIELDS = (
     "fn", "algo", "dim", "pop", "n_islands", "sync_every", "migration",
-    "n_migrants", "share_incumbent", "max_evals", "backend", "params",
-    "polish", "polish_every", "polish_topk", "polish_steps",
+    "n_migrants", "share_incumbent", "max_evals", "backend", "devices",
+    "params", "polish", "polish_every", "polish_topk", "polish_steps",
 )
 
 
@@ -91,6 +91,11 @@ class OptRequest:
     n_migrants: int = 2
     share_incumbent: bool = False
     backend: str = "xla"            # ExecutorConfig.backend
+    # Island sharding (DESIGN.md §8): devices the island axis is laid over
+    # (core.mesh.MeshConfig). Part of the shape-class — the sharded program
+    # (shard_map, ppermute ring, all-gather incumbent) is a different compiled
+    # artifact, so sharded and single-device jobs never share a bucket.
+    devices: int = 1
     params: tuple[tuple[str, Any], ...] = ()  # extra algo kwargs, hashable
     # Hybrid memetic layer (DESIGN.md §6). Polish parameters change the
     # compiled program (an extra in-scan polish stage, its top-k gather and

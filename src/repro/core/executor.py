@@ -27,6 +27,12 @@ so XLA can fuse it into the surrounding generation step — the distributed
 map/reduce costs nothing extra when the mesh is trivial (CPU tests) and lowers
 to balanced SPMD on the pod.
 
+Under the island-sharded engine (``core.mesh.MeshConfig``, DESIGN.md §8) the
+executor is *per-shard*: the engine traces the plain (``mesh_axis=None``)
+evaluator inside its own ``shard_map``, so each device's island block carries
+its own EvalBackend instance and no nested shard_map is ever built — the
+population-sharding path below is for the single-island Table-I layout only.
+
 The evaluator cache below also serves the hybrid memetic layer (DESIGN.md §6):
 ``IslandOptimizer._polish`` rebuilds the evaluator for its gradient probes and
 line-search ladders and — because ``make_batch_evaluator`` memoizes on
@@ -42,6 +48,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.mesh import shard_map as _shard_map
 from repro.functions.benchmarks import Function
 from repro.kernels import registry as kreg
 from repro.kernels.bench_eval import bench_eval as _bench_eval
@@ -141,8 +148,8 @@ def make_batch_evaluator(
         pcount = pop.shape[0]
         pad = (-pcount) % n
         padded = jnp.pad(pop, ((0, pad), (0, 0)))
-        out = jax.shard_map(
-            evaluate, mesh=mesh, in_specs=(spec_in,), out_specs=spec_out,
+        out = _shard_map(
+            evaluate, mesh, in_specs=(spec_in,), out_specs=spec_out,
         )(padded)
         return out[:pcount]
 
@@ -173,6 +180,6 @@ def distributed_map_reduce(
             jax.lax.pmin(local, axis) if reduce_op == "min" else jax.lax.pmax(local, axis)
         )
 
-    return jax.shard_map(
-        body, mesh=mesh, in_specs=(P(axis),), out_specs=P(), check_vma=False,
+    return _shard_map(
+        body, mesh, in_specs=(P(axis),), out_specs=P(),
     )(xs)

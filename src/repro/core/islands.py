@@ -10,6 +10,15 @@ the incumbent all-reduce at each sync round realizes the Observer pattern
 between islands. One *sync round* = `sync_every` generations + migration +
 incumbent merge.
 
+Passing a ``core.mesh.MeshConfig`` makes the engine *device-parallel*
+(DESIGN.md §8): the island axis is laid out over a 1-D device mesh and the
+whole round scan runs under ``shard_map``, each shard owning
+``n_islands / devices`` islands with its own EvalBackend instance. Ring
+migration crosses shard boundaries as a single ``lax.ppermute`` exchange;
+starvation and incumbent sharing degrade to all-gathers on the sync cadence.
+A fixed seed on a 1-device mesh is bit-identical to the unsharded engine —
+the determinism contract ``tests/test_distributed.py`` enforces.
+
 The engine is *device-resident* by default: the whole run is one jitted
 ``lax.scan`` over sync rounds with donated state and an on-device
 ``(n_rounds,)`` incumbent-history buffer, and results cross to the host
@@ -36,9 +45,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import mesh as mesh_mod
 from repro.core import migration as mig
 from repro.core.api import OptimizeResult
 from repro.core.executor import ExecutorConfig, make_batch_evaluator
+from repro.core.mesh import MeshConfig
 from repro.functions.benchmarks import Function
 
 Array = jax.Array
@@ -101,6 +112,7 @@ class IslandOptimizer:
         cfg: IslandConfig,
         params: dict[str, Any] | None = None,
         mesh: Mesh | None = None,
+        mesh_cfg: MeshConfig | None = None,
         exec_cfg: ExecutorConfig = ExecutorConfig(),
         round_callback: Callable[[int, Array, Array], None] | None = None,
     ) -> None:
@@ -108,8 +120,25 @@ class IslandOptimizer:
         self.cfg = cfg
         self.params = dict(params or {})
         self.mesh = mesh
+        self.mesh_cfg = mesh_cfg
         self.exec_cfg = exec_cfg
         self.round_callback = round_callback
+        # Island sharding (DESIGN.md §8): a MeshConfig lays the island axis
+        # over a 1-D device mesh and the round scan runs under shard_map.
+        self._island_mesh = None
+        self._axis: str | None = None
+        self._n_shards = 1
+        if mesh_cfg is not None:
+            if mesh is not None:
+                raise ValueError(
+                    "mesh (population sharding) and mesh_cfg (island "
+                    "sharding) are mutually exclusive")
+            if cfg.n_islands <= 1:
+                raise ValueError("island sharding requires n_islands > 1")
+            mesh_cfg.local_islands(cfg.n_islands)   # divisibility check
+            self._island_mesh = mesh_cfg.build()
+            self._axis = mesh_cfg.axis
+            self._n_shards = mesh_cfg.devices
         # Per-objective compiled multi-job runner (see minimize_many). Keyed by
         # objective identity so a scheduler holding one optimizer per bucket
         # reuses the jitted jobs-axis program across flushes.
@@ -141,12 +170,19 @@ class IslandOptimizer:
     def _round_fn(self, algo: MetaHeuristic) -> Callable[[State, Array], State]:
         cfg = self.cfg
         stacked = cfg.n_islands > 1
+        axis, n_shards = self._axis, self._n_shards
+        n_local = cfg.n_islands // n_shards
         step = algo.step_override if algo.step_override is not None else algo.gen
 
         def round_fn(state: State, key: Array) -> State:
             def one_gen(carry: State, k: Array) -> tuple[State, None]:
                 if stacked:
+                    # Every shard derives the SAME global (I, 2) key table and
+                    # takes its island block, so per-island key streams match
+                    # the unsharded engine exactly (determinism contract, §8).
                     ks = jax.random.split(k, cfg.n_islands)
+                    if axis is not None and n_shards > 1:
+                        ks = _local_rows(ks, axis, n_local)
                     return jax.vmap(step)(carry, ks), None
                 return step(carry, k), None
 
@@ -157,17 +193,24 @@ class IslandOptimizer:
                 pop, fit = mig.migrate(
                     cfg.migration, state["pop"], state["fit"],
                     k=cfg.n_migrants, alive=state.get("alive"),
+                    axis=axis, n_shards=n_shards,
                 )
                 state = {**state, "pop": pop, "fit": fit}
 
             if stacked and cfg.share_incumbent:
-                gi = jnp.argmin(state["best_val"])
-                gval = state["best_val"][gi]
-                garg = state["best_arg"][gi]
+                bv, ba = state["best_val"], state["best_arg"]
+                if axis is not None and n_shards > 1:
+                    # Device-side Observer across shards: gather every
+                    # island's incumbent, broadcast the global best back.
+                    gbv = jax.lax.all_gather(bv, axis, tiled=True)
+                    gba = jax.lax.all_gather(ba, axis, tiled=True)
+                else:
+                    gbv, gba = bv, ba
+                gi = jnp.argmin(gbv)
                 state = {
                     **state,
-                    "best_val": jnp.full_like(state["best_val"], gval),
-                    "best_arg": jnp.broadcast_to(garg, state["best_arg"].shape),
+                    "best_val": jnp.full_like(bv, gbv[gi]),
+                    "best_arg": jnp.broadcast_to(gba[gi], ba.shape),
                 }
             return state
 
@@ -206,17 +249,19 @@ class IslandOptimizer:
         pass_fn = jax.vmap(polish_island) if cfg.n_islands > 1 else polish_island
         return pass_fn, descent.polish_evals_per_point(cfg.dim, pcfg)
 
-    def _run_fn(
-        self, algo: MetaHeuristic, polish_pass: Callable[[State], State] | None = None,
-    ) -> Callable[[State, Array], tuple[Array, Array, Array]]:
-        """Whole-run device program: scan over sync rounds (polishing on the
-        ``polish_every`` cadence), select the global incumbent on device,
-        return ``(best_arg, best_val, history)``."""
-        stacked = self.cfg.n_islands > 1
-        every = max(1, self.cfg.polish_every)
+    def _scan_rounds(
+        self, algo: MetaHeuristic, polish_pass: Callable[[State], State] | None,
+    ) -> Callable[[State, Array], tuple[State, Array]]:
+        """Per-shard round scan ``(state, round_keys) -> (state, history)`` —
+        the body both the unsharded run and the ``shard_map``-wrapped sharded
+        run execute (polish on its cadence, per-round incumbent history)."""
+        cfg = self.cfg
+        stacked = cfg.n_islands > 1
+        every = max(1, cfg.polish_every)
+        axis, n_shards = self._axis, self._n_shards
         round_fn = self._round_fn(algo)
 
-        def run(state: State, round_keys: Array) -> tuple[Array, Array, Array]:
+        def scan_rounds(state: State, round_keys: Array) -> tuple[State, Array]:
             def body(carry: State, xs: tuple[Array, Array]) -> tuple[State, Array]:
                 rk, r = xs
                 carry = round_fn(carry, rk)
@@ -224,16 +269,52 @@ class IslandOptimizer:
                     carry = jax.lax.cond(
                         (r + 1) % every == 0, polish_pass, lambda s: s, carry)
                 bv = carry["best_val"]
-                return carry, (jnp.min(bv) if stacked else bv)
+                point = jnp.min(bv) if stacked else bv
+                if axis is not None and n_shards > 1:
+                    point = jax.lax.pmin(point, axis)   # exact: min of mins
+                return carry, point
 
             rs = jnp.arange(round_keys.shape[0])
-            state, history = jax.lax.scan(body, state, (round_keys, rs))
+            return jax.lax.scan(body, state, (round_keys, rs))
+
+        return scan_rounds
+
+    def _run_fn(
+        self, algo: MetaHeuristic, polish_pass: Callable[[State], State] | None = None,
+    ) -> Callable[[State, Array], tuple[Array, Array, Array]]:
+        """Whole-run device program: scan over sync rounds (polishing on the
+        ``polish_every`` cadence), select the global incumbent on device,
+        return ``(best_arg, best_val, history)``. With an island mesh the scan
+        runs under ``shard_map`` (one shard per island block) and the final
+        selection happens on the reassembled global state."""
+        stacked = self.cfg.n_islands > 1
+        scan_rounds = self._scan_rounds(algo, polish_pass)
+
+        if self._island_mesh is None:
+            def run(state: State, round_keys: Array) -> tuple[Array, Array, Array]:
+                state, history = scan_rounds(state, round_keys)
+                arg, val = _select_best(state, stacked)
+                return arg, val, history
+            return run
+
+        axis = self._axis
+        sharded = mesh_mod.shard_map(
+            scan_rounds, self._island_mesh,
+            in_specs=(P(axis), P()), out_specs=(P(axis), P()))
+
+        def run(state: State, round_keys: Array) -> tuple[Array, Array, Array]:
+            state, history = sharded(state, round_keys)
             arg, val = _select_best(state, stacked)
             return arg, val, history
 
         return run
 
     def _shard_state(self, state: State) -> State:
+        if self._island_mesh is not None:
+            spec = P(self._axis)
+            return jax.tree.map(
+                lambda x: jax.device_put(
+                    x, NamedSharding(self._island_mesh, spec)), state)
         if self.mesh is None or self.cfg.n_islands <= 1:
             return state
         axes = self.cfg.island_axes
@@ -295,6 +376,10 @@ class IslandOptimizer:
         a fixed key — including the polish cadence when ``cfg.polish`` is on.
         """
         cfg = self.cfg
+        if self.round_callback is not None and self._island_mesh is not None:
+            raise ValueError(
+                "round_callback requires the unsharded engine — the "
+                "host-stepped loop cannot run inside shard_map (DESIGN.md §8)")
         if self.round_callback is None:
             algo, run, pp = self._single_fn(f)
             polish_pass = None
@@ -357,6 +442,11 @@ class IslandOptimizer:
         standalone ``minimize`` call with the same key. ``vmap`` over jobs
         composes outside the per-island ``vmap`` and the executor's
         ``shard_map``: J same-shaped jobs cost one dispatch instead of J.
+
+        With an island mesh the jobs-axis ``vmap`` moves *inside* the
+        ``shard_map``: every shard initializes and steps its own island block
+        for all J jobs, and only the final selection runs on the reassembled
+        global state — the sharded analogue of the same program.
         """
         ck = (f.name, id(f.fn), id(f.shift), f.bias)
         hit = self._many_cache.get(ck)
@@ -367,18 +457,44 @@ class IslandOptimizer:
         algo = self._build(f)
         polish_pass, pp = self._polish(f)
         n_rounds, _, _, _ = self._budget(algo, pp)
-        run = self._run_fn(algo, polish_pass)
         stacked = cfg.n_islands > 1
 
-        def one_job(k: Array) -> tuple[Array, Array, Array]:
-            key, ik = jax.random.split(k)
-            if stacked:
-                state = jax.vmap(algo.init)(jax.random.split(ik, cfg.n_islands))
-            else:
-                state = algo.init(ik)
-            return run(state, _chain_split(key, n_rounds))
+        if self._island_mesh is None:
+            run = self._run_fn(algo, polish_pass)
 
-        many = jax.jit(jax.vmap(one_job))
+            def one_job(k: Array) -> tuple[Array, Array, Array]:
+                key, ik = jax.random.split(k)
+                if stacked:
+                    state = jax.vmap(algo.init)(
+                        jax.random.split(ik, cfg.n_islands))
+                else:
+                    state = algo.init(ik)
+                return run(state, _chain_split(key, n_rounds))
+
+            many = jax.jit(jax.vmap(one_job))
+        else:
+            axis, n_shards = self._axis, self._n_shards
+            n_local = cfg.n_islands // n_shards
+            scan_rounds = self._scan_rounds(algo, polish_pass)
+
+            def one_job_local(k: Array) -> tuple[State, Array]:
+                key, ik = jax.random.split(k)
+                iks = jax.random.split(ik, cfg.n_islands)
+                if n_shards > 1:
+                    iks = _local_rows(iks, axis, n_local)
+                state = jax.vmap(algo.init)(iks)
+                return scan_rounds(state, _chain_split(key, n_rounds))
+
+            sharded = mesh_mod.shard_map(
+                jax.vmap(one_job_local), self._island_mesh,
+                in_specs=(P(),), out_specs=(P(None, axis), P()))
+
+            def many_sharded(keys: Array) -> tuple[Array, Array, Array]:
+                state, hists = sharded(keys)        # (J, I, ...), (J, R)
+                args, vals = jax.vmap(lambda s: _select_best(s, True))(state)
+                return args, vals, hists
+
+            many = jax.jit(many_sharded)
         self._many_cache[ck] = (f.fn, algo, many, pp)
         return algo, many, pp
 
@@ -425,6 +541,14 @@ class IslandOptimizer:
             )
             for j in range(n_jobs)
         ]
+
+
+def _local_rows(x: Array, axis: str, n_local: int) -> Array:
+    """This shard's ``n_local``-row block of a replicated per-island table —
+    how a shard under ``shard_map`` picks its islands' keys out of the global
+    key table (same values the unsharded engine hands to ``vmap``)."""
+    start = jax.lax.axis_index(axis) * n_local
+    return jax.lax.dynamic_slice_in_dim(x, start, n_local, axis=0)
 
 
 def _select_best(state: State, stacked: bool) -> tuple[Array, Array]:

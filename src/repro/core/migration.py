@@ -1,9 +1,19 @@
 """Island migration policies — popt4jlib's DGA/DPSO/DDE migration models.
 
-Operates on island-stacked arrays ``pop: (I, P, D)``, ``fit: (I, P)``. When the
-island axis is sharded over devices, the rolls/gathers below lower to
-collective-permute / all-gather on the pod — the TPU-native version of the
-Java library's socket-borne migrant exchange.
+Operates on island-stacked arrays ``pop: (I, P, D)``, ``fit: (I, P)``. Every
+policy has two forms selected by the ``axis`` argument (DESIGN.md §8):
+
+* ``axis=None`` — the island axis is resident on one device; migration is a
+  plain roll/gather over it.
+* ``axis=<mesh axis>`` (inside ``shard_map``, ``n_shards`` devices) — each
+  shard holds ``I_local = I / n_shards`` islands. The ring becomes a local
+  roll plus ONE ``lax.ppermute`` exchange of the boundary island's migrants —
+  the Java library's socket hop, compiled to a collective-permute — and the
+  starvation policy degrades to an all-gather-on-cadence path: gather the
+  stacked populations, apply the host-side policy verbatim, slice the local
+  block back. Both forms compute identical values (the sharded ring
+  reassembles exactly the rolled migrant tensor), which is what the engine's
+  determinism contract rests on.
 
 Policies:
   ring        counter-clock-wise unidirectional ring (the DPSO/DDE default):
@@ -19,6 +29,8 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.mesh import ring_perm
 
 Array = jax.Array
 
@@ -37,8 +49,25 @@ def _replace_worst(pop: Array, fit: Array, mig: Array, migf: Array):
     return pop.at[worst].set(newp), fit.at[worst].set(newf)
 
 
-def ring(pop: Array, fit: Array, k: int = 2):
-    """Counter-clock-wise ring migration of the best-k per island."""
+def ring(pop: Array, fit: Array, k: int = 2,
+         axis: str | None = None, n_shards: int = 1):
+    """Counter-clock-wise ring migration of the best-k per island.
+
+    With ``axis`` set (inside ``shard_map``), the global roll-by-one becomes a
+    local roll plus a ``ppermute`` handoff of the last local island's migrants
+    to the next shard's first island — one boundary exchange per sync round,
+    regardless of how many islands a shard holds.
+    """
+    if axis is not None and n_shards > 1:
+        best = jnp.argsort(fit, axis=1)[:, :k]                     # (I_l,k)
+        mig = jnp.take_along_axis(pop, best[..., None], axis=1)    # (I_l,k,D)
+        migf = jnp.take_along_axis(fit, best, axis=1)              # (I_l,k)
+        perm = ring_perm(n_shards)
+        prev_m = jax.lax.ppermute(mig[-1], axis, perm)             # (k,D)
+        prev_f = jax.lax.ppermute(migf[-1], axis, perm)            # (k,)
+        mig = jnp.concatenate([prev_m[None], mig[:-1]], axis=0)
+        migf = jnp.concatenate([prev_f[None], migf[:-1]], axis=0)
+        return jax.vmap(_replace_worst)(pop, fit, mig, migf)
     if pop.shape[0] <= 1:
         return pop, fit
     best = jnp.argsort(fit, axis=1)[:, :k]                         # (I,k)
@@ -50,12 +79,30 @@ def ring(pop: Array, fit: Array, k: int = 2):
     return jax.vmap(_replace_worst)(pop, fit, mig, migf)
 
 
-def starvation(pop: Array, fit: Array, k: int = 2, alive: Array | None = None):
+def starvation(pop: Array, fit: Array, k: int = 2, alive: Array | None = None,
+               axis: str | None = None, n_shards: int = 1):
     """DGA starvation-based immigration: weakest island hosts everyone's best.
 
     ``alive`` (I, P) marks live individuals (aging model); dead slots carry +inf
     fitness. Migrants land in the host island's worst/dead slots.
+
+    The policy is inherently global (the host is the argmin over every
+    island's live count), so its sharded form is the documented all-gather
+    degradation (DESIGN.md §8): gather the island-stacked arrays once per sync
+    round, run the host-side policy unchanged on the gathered copy, and slice
+    this shard's island block back out — bit-identical to the unsharded policy
+    by construction, at the cost of one all-gather on the migration cadence.
     """
+    if axis is not None and n_shards > 1:
+        gpop = jax.lax.all_gather(pop, axis, tiled=True)           # (I,P,D)
+        gfit = jax.lax.all_gather(fit, axis, tiled=True)           # (I,P)
+        galive = (None if alive is None
+                  else jax.lax.all_gather(alive, axis, tiled=True))
+        npop, nfit = starvation(gpop, gfit, k, galive)
+        i_local = pop.shape[0]
+        start = jax.lax.axis_index(axis) * i_local
+        return (jax.lax.dynamic_slice_in_dim(npop, start, i_local, 0),
+                jax.lax.dynamic_slice_in_dim(nfit, start, i_local, 0))
     if pop.shape[0] <= 1:
         return pop, fit
     if alive is None:
@@ -87,12 +134,15 @@ def starvation(pop: Array, fit: Array, k: int = 2, alive: Array | None = None):
     return pop.at[host].set(hpop2), fit.at[host].set(hfit2)
 
 
-def migrate(policy: str, pop: Array, fit: Array, k: int = 2, alive: Array | None = None):
-    """Dispatch to a migration policy by name: ring | starvation | none."""
+def migrate(policy: str, pop: Array, fit: Array, k: int = 2,
+            alive: Array | None = None,
+            axis: str | None = None, n_shards: int = 1):
+    """Dispatch to a migration policy by name: ring | starvation | none.
+    ``axis``/``n_shards`` select the sharded (inside-``shard_map``) form."""
     if policy == "ring":
-        return ring(pop, fit, k)
+        return ring(pop, fit, k, axis=axis, n_shards=n_shards)
     if policy == "starvation":
-        return starvation(pop, fit, k, alive)
+        return starvation(pop, fit, k, alive, axis=axis, n_shards=n_shards)
     if policy == "none":
         return pop, fit
     raise ValueError(f"unknown migration policy {policy!r}")

@@ -1,4 +1,4 @@
-"""Two-stage explore→polish pipeline — one dispatch per stage (DESIGN.md §6).
+"""Two-stage explore→polish pipeline — one dispatch per stage (DESIGN.md §7).
 
 The in-scan hybrid (``IslandConfig.polish``) interleaves local descent with
 the global search. This module is the *staged* alternative the paper's DGA+ASD

@@ -35,6 +35,7 @@ from jax.sharding import Mesh
 from repro.core.api import OptRequest, OptResponse
 from repro.core.executor import ExecutorConfig
 from repro.core.islands import IslandConfig, IslandOptimizer
+from repro.core.mesh import MeshConfig
 from repro.functions import get as get_function
 
 BucketKey = tuple
@@ -124,9 +125,16 @@ class ShapeBucketScheduler:
                 polish_every=req.polish_every, polish_topk=req.polish_topk,
                 polish_steps=req.polish_steps,
             )
+            # Sharded requests (devices > 1, DESIGN.md §8) get their own
+            # island mesh; MeshConfig.build raises inside flush_bucket's
+            # fault isolation when the host lacks the devices, so one
+            # impossible request cannot take the service down.
+            mesh_cfg = (MeshConfig(devices=req.devices)
+                        if req.devices > 1 else None)
             opt = IslandOptimizer(
                 ALGORITHMS[req.algo], cfg, params=dict(req.params),
-                mesh=self.mesh,
+                mesh=None if mesh_cfg is not None else self.mesh,
+                mesh_cfg=mesh_cfg,
                 exec_cfg=dataclasses.replace(self.exec_cfg, backend=req.backend),
             )
             self._lru_put(self._optimizers, key, opt)

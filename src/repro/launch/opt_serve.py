@@ -23,6 +23,15 @@ compiled shape-class:
                                  "polish": "asd", "polish_every": 3,
                                  "polish_topk": 2, "polish_steps": 2, "seed": 0}}
 
+Device-sharded jobs (DESIGN.md §8) work the same way — ``devices`` is an
+ordinary request field that joins the shape-class, so sharded and
+single-device traffic never mix buckets and the service loop needs no
+changes. A request the host cannot place (more devices than visible) errors
+in its own bucket without disturbing other clients:
+
+    {"op": "submit", "request": {"fn": "rastrigin", "dim": 16, "n_islands": 8,
+                                 "devices": 8, "max_evals": 40000, "seed": 0}}
+
 Batching policy (host-side queue): a bucket is dispatched when it reaches
 ``--max-batch`` queued jobs, when its oldest job ages past the ``--flush-ms``
 deadline, or when a client forces it via ``result``/``flush``. Everything the

@@ -1,4 +1,4 @@
-"""Hybrid memetic layer tests (DESIGN.md §6): batched polish semantics and
+"""Hybrid memetic layer tests (DESIGN.md §6–§7): batched polish semantics and
 eval accounting, in-scan hybrid determinism/parity across minimize /
 minimize_many / host-stepped paths, shape-class separation, the two-stage
 pipeline, and the JSONL service path."""

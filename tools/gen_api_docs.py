@@ -26,6 +26,7 @@ MODULES = (
     "repro.core.executor",
     "repro.core.scheduler",
     "repro.core.pipeline",
+    "repro.core.mesh",
     "repro.core.migration",
     "repro.core.coupling",
     "repro.core.de",
