@@ -1,0 +1,164 @@
+"""Algorithm-portfolio islands vs single meta-heuristics at equal eval budget
+(DESIGN.md §10 — the paper's Fig.4 cooperation scenario).
+
+For each registry testbed function, run a mixed DE+PSO+SA portfolio (one
+policy per island, cycled; ring migration + shared incumbent) against each
+single algorithm run homogeneous over the SAME island topology and the SAME
+function-evaluation budget, and record the median best objective over seeds.
+Every (function, variant) cell is ONE jitted jobs-axis dispatch
+(``minimize_many`` over the seed axis).
+
+Writes ``BENCH_portfolio.json`` (the repo's portfolio-quality artifact; CI
+uploads the --smoke variant) and exits non-zero unless the portfolio
+
+* beats the WORST single algorithm's median on every function, and
+* beats the BEST single algorithm's median on at least ``--min-best-wins``
+  functions
+
+— the "no single method dominates, the portfolio hedges" claim, quantified.
+
+    PYTHONPATH=src python benchmarks/portfolio.py            # full run
+    PYTHONPATH=src python benchmarks/portfolio.py --smoke    # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ALGORITHMS, IslandConfig, IslandOptimizer
+from repro.functions import get
+
+FUNCTIONS = ("sphere", "rosenbrock", "griewank", "levy", "ackley",
+             "rastrigin", "schwefel", "dropwave")
+SINGLES = ("de", "pso", "sa")
+
+
+def _sa_params(budget: int, pop: int, n_islands: int, sync_every: int,
+               t0: float, step_frac: float) -> dict:
+    """SA tuned as a *local refiner* (low T0, small steps — it polishes the
+    good migrants the ring delivers, the cooperation mechanism that lets the
+    mixed portfolio beat its best constituent), annealing over the run's
+    actual generation horizon so single-SA runs and the portfolio's SA
+    islands cool at one rate. The same params go to the single-SA baseline —
+    the comparison stays algorithm-fair."""
+    rounds = max(1, (budget - pop * n_islands) // (pop * n_islands * sync_every))
+    return {"T0": t0, "step_frac": step_frac, "n_gens_hint": rounds * sync_every}
+
+
+def run_variant(fn: str, dim: int, pop: int, n_islands: int, budget: int,
+                sync_every: int, seeds: int, portfolio: tuple[str, ...] | None,
+                algo: str | None, sa_t0: float, sa_step_frac: float) -> dict:
+    f = get(fn, dim)
+    cfg = IslandConfig(
+        n_islands=n_islands, pop=pop, dim=dim, sync_every=sync_every,
+        migration="ring", share_incumbent=True, max_evals=budget,
+        portfolio=portfolio or ())
+    sa = _sa_params(budget, pop, n_islands, sync_every, sa_t0, sa_step_frac)
+    if portfolio:
+        params = {"sa": sa} if "sa" in portfolio else {}
+        opt = IslandOptimizer(None, cfg, params=params)
+    else:
+        opt = IslandOptimizer(ALGORITHMS[algo], cfg,
+                              params=sa if algo == "sa" else {})
+    keys = jnp.stack([jax.random.PRNGKey(s) for s in range(seeds)])
+    t0 = time.perf_counter()
+    results = opt.minimize_many(f, keys)   # one dispatch for all seeds
+    dt = time.perf_counter() - t0
+    values = [r.value for r in results]
+    return {
+        "median": statistics.median(values),
+        "best": min(values),
+        "worst": max(values),
+        "n_evals": results[0].n_evals,
+        "wall_s": round(dt, 3),
+    }
+
+
+def bench(dim: int, pop: int, n_islands: int, budget: int, sync_every: int,
+          seeds: int, portfolio: tuple[str, ...], sa_t0: float,
+          sa_step_frac: float) -> list[dict]:
+    rows = []
+    for fn in FUNCTIONS:
+        singles = {a: run_variant(fn, dim, pop, n_islands, budget, sync_every,
+                                  seeds, None, a, sa_t0, sa_step_frac)
+                   for a in SINGLES}
+        port = run_variant(fn, dim, pop, n_islands, budget, sync_every,
+                           seeds, portfolio, None, sa_t0, sa_step_frac)
+        best_single = min(SINGLES, key=lambda a: singles[a]["median"])
+        worst_single = max(SINGLES, key=lambda a: singles[a]["median"])
+        rows.append({
+            "fn": fn, "singles": singles, "portfolio": port,
+            "best_single": best_single, "worst_single": worst_single,
+            "beats_worst": port["median"] < singles[worst_single]["median"],
+            "beats_best": port["median"] < singles[best_single]["median"],
+        })
+        marks = " ".join(f"{a}={singles[a]['median']:.4g}" for a in SINGLES)
+        print(f"{fn:12s} portfolio {port['median']:12.5g}  [{marks}]  "
+              f"{'BEATS-BEST' if rows[-1]['beats_best'] else ''}", flush=True)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: fewer seeds, smaller budget")
+    ap.add_argument("--dim", type=int, default=12)
+    ap.add_argument("--pop", type=int, default=32)
+    ap.add_argument("--islands", type=int, default=6)
+    ap.add_argument("--sync-every", type=int, default=5)
+    ap.add_argument("--budget", type=int, default=24000)
+    ap.add_argument("--seeds", type=int, default=9)
+    ap.add_argument("--portfolio", default="de,pso,sa",
+                    help="comma list, cycled over the islands")
+    ap.add_argument("--sa-t0", type=float, default=5.0,
+                    help="SA initial temperature (low: SA as local refiner)")
+    ap.add_argument("--sa-step-frac", type=float, default=0.02,
+                    help="SA proposal sigma as a fraction of the box width")
+    ap.add_argument("--min-best-wins", type=int, default=2,
+                    help="fail unless the portfolio beats the best single's "
+                         "median on this many functions")
+    ap.add_argument("--out", default="BENCH_portfolio.json")
+    args = ap.parse_args()
+
+    if args.smoke:
+        args.seeds, args.budget = 5, 12000
+
+    portfolio = tuple(args.portfolio.split(","))
+    rows = bench(args.dim, args.pop, args.islands, args.budget,
+                 args.sync_every, args.seeds, portfolio, args.sa_t0,
+                 args.sa_step_frac)
+    worst_ok = sum(r["beats_worst"] for r in rows)
+    best_wins = sum(r["beats_best"] for r in rows)
+    rec = {
+        "portfolio": list(portfolio), "singles": list(SINGLES),
+        "dim": args.dim, "pop": args.pop, "n_islands": args.islands,
+        "sync_every": args.sync_every, "budget": args.budget,
+        "sa_t0": args.sa_t0, "sa_step_frac": args.sa_step_frac,
+        "seeds": args.seeds, "backend": jax.default_backend(),
+        "smoke": args.smoke, "rows": rows,
+        "beats_worst_on": worst_ok, "beats_best_on": best_wins,
+        "n_functions": len(FUNCTIONS),
+    }
+    with open(args.out, "w") as fh:
+        json.dump(rec, fh, indent=2)
+        fh.write("\n")
+    print(f"\nportfolio {'+'.join(portfolio)} beats the worst single on "
+          f"{worst_ok}/{len(FUNCTIONS)} and the best single on "
+          f"{best_wins}/{len(FUNCTIONS)} functions -> {args.out}")
+    if worst_ok < len(FUNCTIONS):
+        raise SystemExit(
+            f"portfolio lost to the worst single algorithm on "
+            f"{len(FUNCTIONS) - worst_ok} functions")
+    if best_wins < args.min_best_wins:
+        raise SystemExit(
+            f"portfolio beat the best single on only {best_wins} functions "
+            f"(< {args.min_best_wins})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,6 @@
 """popt4jax core — the paper's contribution as composable JAX modules."""
 from repro.core import bh, de, ea, fa, ga, mc, pso, sa  # noqa: F401
+from repro.core import portfolio  # noqa: F401
 from repro.core.api import (  # noqa: F401
     ObserverHub, OptimizeResult, Optimizer, OptRequest, OptResponse)
 from repro.core.executor import ExecutorConfig, make_batch_evaluator  # noqa: F401
@@ -7,6 +8,7 @@ from repro.core.islands import IslandConfig, IslandOptimizer, MetaHeuristic  # n
 from repro.core.mesh import MeshConfig  # noqa: F401
 from repro.core.pipeline import (  # noqa: F401
     explore_then_polish, explore_then_polish_many)
+from repro.core.portfolio import AuxSlot, PolicySpec, Portfolio  # noqa: F401
 from repro.core.scheduler import ShapeBucketScheduler  # noqa: F401
 
 ALGORITHMS = {

@@ -19,6 +19,10 @@ Java -> JAX mapping (see DESIGN.md §2):
       runs plus the batched polish layer (IslandConfig.polish /
       OptRequest.polish) that hybridizes any meta-heuristic in-scan
       (DESIGN.md §6), and core.pipeline for explore-then-polish staging.
+  Fig.4 multi-method cooperation        -> IslandConfig.portfolio /
+      OptRequest.portfolio (DESIGN.md §10): heterogeneous per-island policies
+      from core.portfolio's unified-state registry, dispatched through
+      lax.switch inside one jitted round scan.
 
 Runs are device-resident by default: IslandOptimizer.minimize is one jitted
 lax.scan over sync rounds, results cross to the host once (DESIGN.md §4).
@@ -66,7 +70,19 @@ SHAPE_CLASS_FIELDS = (
     "fn", "algo", "dim", "pop", "n_islands", "sync_every", "migration",
     "n_migrants", "share_incumbent", "max_evals", "backend", "devices",
     "params", "polish", "polish_every", "polish_topk", "polish_steps",
+    "portfolio",
 )
+
+
+def _freeze(v: Any) -> Any:
+    """Recursively freeze JSON values into hashable form: dicts become sorted
+    pair-tuples, lists become tuples — so nested per-policy portfolio params
+    survive ``shape_class()``'s use as a dict key."""
+    if isinstance(v, dict):
+        return tuple(sorted((k, _freeze(x)) for k, x in v.items()))
+    if isinstance(v, (list, tuple)):
+        return tuple(_freeze(x) for x in v)
+    return v
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,22 +121,33 @@ class OptRequest:
     polish_every: int = 1           # sync rounds between polish events
     polish_topk: int = 4            # per-island candidates polished per event
     polish_steps: int = 3           # descent iterations per polish event
+    # Heterogeneous algorithm portfolio (DESIGN.md §10): per-island policy
+    # names (cycled when shorter than n_islands). Non-empty selects portfolio
+    # mode — ``algo`` is ignored and ``params`` maps policy name -> kwargs.
+    # Part of the shape-class: the portfolio's lax.switch branch table is
+    # compiled into the program, so portfolio and homogeneous jobs (or two
+    # different portfolios) never share a bucket.
+    portfolio: tuple[str, ...] = ()
 
     def shape_class(self) -> tuple:
         """Bucket key: everything that feeds the compiled program's shape or
-        its closed-over constants — i.e. everything but the seed."""
-        return tuple(getattr(self, n) for n in SHAPE_CLASS_FIELDS)
+        its closed-over constants — i.e. everything but the seed. In
+        portfolio mode ``algo`` is ignored by the engine, so it is
+        normalized out of the key: portfolio jobs that differ only in the
+        (unused) ``algo`` field share one compiled bucket."""
+        return tuple(
+            "" if n == "algo" and self.portfolio else getattr(self, n)
+            for n in SHAPE_CLASS_FIELDS)
 
     @classmethod
     def from_dict(cls, d: dict[str, Any]) -> "OptRequest":
         d = dict(d)
-        params = d.pop("params", ())
-        if isinstance(params, dict):
-            params = tuple(sorted(params.items()))
-        else:
-            # JSON delivers pairs as lists; re-tuple so the request stays
-            # hashable (shape_class is a dict key in the scheduler).
-            params = tuple(tuple(p) for p in params)
+        # JSON delivers dicts/lists; freeze both recursively so the request
+        # stays hashable (shape_class is a dict key in the scheduler) —
+        # including portfolio params' nested per-policy kwarg dicts.
+        params = _freeze(d.pop("params", ()))
+        if "portfolio" in d:
+            d["portfolio"] = tuple(d["portfolio"])
         names = {f.name for f in dataclasses.fields(cls)}
         unknown = set(d) - names
         if unknown:

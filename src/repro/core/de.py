@@ -142,5 +142,11 @@ def make(
         step_override = gen_fused
 
     gen = gen_sync if barrier_mode == "sync" else gen_chunked
-    return MetaHeuristic("de", init, gen, evals_per_gen=pop, init_evals=pop,
+    # Chunked mode evaluates n_eff_chunks fixed-size blocks of csz rows; when
+    # csz does not divide pop the clamped slices overlap and the generation
+    # really consumes csz * n_eff_chunks evaluations, not pop — charge what
+    # the evaluator actually runs (parity enforced for every registered
+    # policy by tests/test_metaheuristics.py::test_evals_per_gen_parity).
+    evals = csz * n_eff_chunks if barrier_mode == "chunked" else pop
+    return MetaHeuristic("de", init, gen, evals_per_gen=evals, init_evals=pop,
                          step_override=step_override)

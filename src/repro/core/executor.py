@@ -94,10 +94,13 @@ def _make_eval_once(f: Function, cfg: ExecutorConfig) -> Callable[[Array], Array
 
 # Per-bucket evaluator cache: the scheduler rebuilds an optimizer per bucket
 # flush, and a stable evaluator identity keeps the downstream jit caches warm
-# (a fresh closure would recompile every generation step). Keyed by objective
-# identity + config; values carry the live objects so a recycled id() can
-# never alias a dead entry. FIFO-capped: keys are request-controlled, so an
-# adversarial traffic mix must recompile rather than grow memory unboundedly.
+# (a fresh closure would recompile every generation step). Keyed by
+# Function.cache_token() — a GC-stable identity token plus the shift content,
+# so a recycled id() can never silently alias a dead objective or a dead
+# shift array — plus config and mesh; values still carry the live objects as
+# a belt-and-braces identity guard. FIFO-capped: keys are request-controlled,
+# so an adversarial traffic mix must recompile rather than grow memory
+# unboundedly.
 _EVALUATOR_CACHE: dict[tuple, tuple] = {}
 _EVALUATOR_CACHE_MAX = 256
 
@@ -113,7 +116,10 @@ def make_batch_evaluator(
     repeated builds for the same shape-class (scheduler buckets, benchmark
     loops) return the same callable.
     """
-    ck = (f.name, id(f.fn), id(f.shift), f.bias, cfg, id(mesh))
+    # id(mesh) is safe here because live cache entries hold the mesh strongly
+    # (hit[1]), so a colliding recycled address always fails the identity
+    # guard below and rebuilds instead of serving a stale program.
+    ck = (*f.cache_token(), cfg, id(mesh))
     hit = _EVALUATOR_CACHE.get(ck)
     if hit is not None and hit[0] is f.fn and hit[1] is mesh:
         return hit[2]

@@ -3,6 +3,15 @@
 Fig.4 setup: beta=1, delta=0.97 (randomness decay), gamma=200, L=1/sqrt(gamma).
 Every firefly moves toward each brighter one with attraction beta*exp(-gamma r^2)
 plus a decaying random walk; O(P^2 D) per generation (P is small: 50 in the paper).
+
+Eval accounting: the pairwise attraction reads only the *cached* fitness of
+the previous generation — none of the O(P^2) interactions queries the
+objective — so a generation consumes exactly ``pop`` evaluations (one batch
+evaluator call on the moved swarm) for ANY population size, not just the
+paper's P=50 default. ``evals_per_gen=pop`` below is that invariant, and
+``tests/test_metaheuristics.py::test_evals_per_gen_parity`` counts actual
+evaluator rows at a non-default ``pop`` to enforce it for all eight
+registered policies.
 """
 from __future__ import annotations
 
@@ -49,7 +58,7 @@ def make(
         move = jnp.einsum("ij,ijd->id", attract, diff)
         noise = alpha * L * (jax.random.uniform(key, x.shape) - 0.5)
         x = clip_box(x + move + noise, lo, hi)
-        fit = evaluator(x)
+        fit = evaluator(x)   # the generation's ONLY objective queries: P rows
         i = jnp.argmin(fit)
         better = fit[i] < state["best_val"]
         return {

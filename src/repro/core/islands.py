@@ -33,6 +33,16 @@ best candidates pass through a batched fixed-shape local descent
 the same jitted scan, with polish evaluations charged to ``max_evals``. The
 polish pass is deterministic, so fixed-seed trajectories stay reproducible
 through both ``minimize`` and ``minimize_many``.
+
+``IslandConfig.portfolio`` makes the engine *heterogeneous* (DESIGN.md §10):
+each island carries its own policy from ``core.portfolio``'s unified-state
+registry and the round loop dispatches the generation step through
+``lax.switch`` over the portfolio's branch table — a mixed DE+PSO+SA island
+set runs inside the SAME jitted scan, composing with migration (migrants
+carry pos/fit; destination-policy aux slots re-initialize on adoption),
+incumbent sharing, the polish cadence and island sharding. A homogeneous
+portfolio skips the switch and is bit-identical to the plain
+``algo_maker``-driven engine.
 """
 from __future__ import annotations
 
@@ -80,6 +90,11 @@ class IslandConfig:
     polish_every: int = 1         # sync rounds between polish events
     polish_topk: int = 4          # per-island candidates polished per event
     polish_steps: int = 3         # descent iterations per polish event
+    # Heterogeneous algorithm portfolio (DESIGN.md §10): one policy name per
+    # island (cycled round-robin when shorter than n_islands). Non-empty
+    # selects portfolio mode — pass algo_maker=None; per-policy params go in
+    # IslandOptimizer(params={"de": {...}, ...}).
+    portfolio: tuple[str, ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,7 +123,7 @@ class IslandOptimizer:
 
     def __init__(
         self,
-        algo_maker: AlgoMaker,
+        algo_maker: AlgoMaker | None,
         cfg: IslandConfig,
         params: dict[str, Any] | None = None,
         mesh: Mesh | None = None,
@@ -119,6 +134,19 @@ class IslandOptimizer:
         self.algo_maker = algo_maker
         self.cfg = cfg
         self.params = dict(params or {})
+        # Heterogeneous portfolio mode (DESIGN.md §10): cfg.portfolio names
+        # the per-island policies; the single algo_maker is unused.
+        if cfg.portfolio:
+            if algo_maker is not None:
+                raise ValueError(
+                    "cfg.portfolio selects per-island policies; pass "
+                    "algo_maker=None")
+            if cfg.n_islands <= 1:
+                raise ValueError(
+                    "cfg.portfolio requires n_islands > 1 — each island "
+                    "carries one policy")
+        elif algo_maker is None:
+            raise ValueError("algo_maker is required unless cfg.portfolio is set")
         self.mesh = mesh
         self.mesh_cfg = mesh_cfg
         self.exec_cfg = exec_cfg
@@ -160,21 +188,53 @@ class IslandOptimizer:
         )
         return make_batch_evaluator(f, exec_cfg, self.mesh if pop_axis_shard else None)
 
-    def _build(self, f: Function) -> MetaHeuristic:
+    def _build(self, f: Function):
+        """The per-run policy object: a ``MetaHeuristic`` from ``algo_maker``,
+        or a ``core.portfolio.Portfolio`` in heterogeneous mode."""
         cfg = self.cfg
+        if cfg.portfolio:
+            from repro.core import portfolio as pf  # late: pf imports the algos
+            return pf.build_portfolio(
+                pf.expand(cfg.portfolio, cfg.n_islands), f=f,
+                evaluator=self._evaluator(f), pop=cfg.pop, dim=cfg.dim,
+                params=self.params)
         return self.algo_maker(
             f=f, evaluator=self._evaluator(f), pop=cfg.pop, dim=cfg.dim,
             **self.params
         )
 
-    def _round_fn(self, algo: MetaHeuristic) -> Callable[[State, Array], State]:
+    def _eval_totals(self, algo) -> tuple[int, int]:
+        """(per-generation, init) evaluation totals across all islands — the
+        one place homogeneous and heterogeneous accounting meet."""
+        if self.cfg.portfolio:
+            return algo.per_gen_total, algo.init_total
+        return (algo.evals_per_gen * self.cfg.n_islands,
+                algo.init_evals * self.cfg.n_islands)
+
+    def _round_fn(self, algo) -> Callable[[State, Array], State]:
+        from repro.core import portfolio as pf  # late: pf imports the algos
         cfg = self.cfg
+        port = algo if cfg.portfolio else None
         stacked = cfg.n_islands > 1
         axis, n_shards = self._axis, self._n_shards
         n_local = cfg.n_islands // n_shards
-        step = algo.step_override if algo.step_override is not None else algo.gen
+        if port is None:
+            step = (algo.step_override if algo.step_override is not None
+                    else algo.gen)
+
+        def _local_branch() -> Array | None:
+            # The (static, replicated) island->branch table; each shard takes
+            # its block, mirroring the key-table slicing below.
+            if port is None or port.n_branches == 1:
+                return None
+            br = jnp.asarray(port.branch_of)
+            if axis is not None and n_shards > 1:
+                br = _local_rows(br, axis, n_local)
+            return br
 
         def round_fn(state: State, key: Array) -> State:
+            br = _local_branch()
+
             def one_gen(carry: State, k: Array) -> tuple[State, None]:
                 if stacked:
                     # Every shard derives the SAME global (I, 2) key table and
@@ -183,6 +243,8 @@ class IslandOptimizer:
                     ks = jax.random.split(k, cfg.n_islands)
                     if axis is not None and n_shards > 1:
                         ks = _local_rows(ks, axis, n_local)
+                    if port is not None:
+                        return port.step_stacked(carry, ks, br), None
                     return jax.vmap(step)(carry, ks), None
                 return step(carry, k), None
 
@@ -190,12 +252,43 @@ class IslandOptimizer:
             state, _ = jax.lax.scan(one_gen, state, gen_keys)
 
             if stacked and cfg.migration != "none":
+                old_pop, old_fit = state["pop"], state["fit"]
+                if port is None:
+                    mig_alive = state.get("alive")
+                else:
+                    # Per-island liveness for the (global) starvation count:
+                    # policies that own an aging mask (ga) contribute it;
+                    # the rest contribute isfinite(fit) — exactly what the
+                    # plain engine's alive=None default computes, so a
+                    # homogeneous portfolio stays bit-identical even when
+                    # the executor has evicted candidates to +inf.
+                    oa = jnp.asarray(port.owns_alive)
+                    if axis is not None and n_shards > 1:
+                        oa = _local_rows(oa, axis, n_local)
+                    mig_alive = jnp.where(oa[:, None], state["alive"],
+                                          jnp.isfinite(state["fit"]))
                 pop, fit = mig.migrate(
                     cfg.migration, state["pop"], state["fit"],
-                    k=cfg.n_migrants, alive=state.get("alive"),
+                    k=cfg.n_migrants, alive=mig_alive,
                     axis=axis, n_shards=n_shards,
                 )
                 state = {**state, "pop": pop, "fit": fit}
+                if port is not None or pf.has_adopt_state(algo.name):
+                    # Migration carries pos/fit only; slots whose values
+                    # changed hold adopted migrants. They revive (alive) and
+                    # the destination policy re-initializes its aux slots
+                    # (velocity, pbest, age, ... — DESIGN.md §10). The plain
+                    # engine applies the same registered adopt rules to the
+                    # native state, so homogeneous portfolios stay
+                    # bit-identical to it for EVERY policy — and plain ga/pso
+                    # no longer re-kill or mislead the migrants they adopt.
+                    adopted = (jnp.any(pop != old_pop, axis=-1)
+                               | (fit != old_fit))
+                    if port is not None:
+                        state = port.adopt_stacked(state, adopted, br)
+                    else:
+                        state = jax.vmap(partial(pf.adopt_native, algo.name))(
+                            state, adopted)
 
             if stacked and cfg.share_incumbent:
                 bv, ba = state["best_val"], state["best_arg"]
@@ -250,7 +343,7 @@ class IslandOptimizer:
         return pass_fn, descent.polish_evals_per_point(cfg.dim, pcfg)
 
     def _scan_rounds(
-        self, algo: MetaHeuristic, polish_pass: Callable[[State], State] | None,
+        self, algo, polish_pass: Callable[[State], State] | None,
     ) -> Callable[[State, Array], tuple[State, Array]]:
         """Per-shard round scan ``(state, round_keys) -> (state, history)`` —
         the body both the unsharded run and the ``shard_map``-wrapped sharded
@@ -280,7 +373,7 @@ class IslandOptimizer:
         return scan_rounds
 
     def _run_fn(
-        self, algo: MetaHeuristic, polish_pass: Callable[[State], State] | None = None,
+        self, algo, polish_pass: Callable[[State], State] | None = None,
     ) -> Callable[[State, Array], tuple[Array, Array, Array]]:
         """Whole-run device program: scan over sync rounds (polishing on the
         ``polish_every`` cadence), select the global incumbent on device,
@@ -325,17 +418,19 @@ class IslandOptimizer:
 
         return jax.tree.map(put, state)
 
-    def _budget(self, algo: MetaHeuristic,
+    def _budget(self, per_gen_total: int, init_total: int,
                 polish_per_point: int = 0) -> tuple[int, int, int, int]:
         """(n_rounds, per_round_evals, n_polish, per_polish_evals) from the
         eval budget — one accounting rule shared by minimize and
-        minimize_many. Polish events fire every ``polish_every`` rounds and
+        minimize_many, fed by ``_eval_totals`` so heterogeneous portfolios
+        (per-island ``evals_per_gen``) charge exactly what each island's
+        policy consumes. Polish events fire every ``polish_every`` rounds and
         cost ``polish_topk * polish_per_point`` per island, charged against
         the same ``max_evals`` as generation steps, so hybrid runs stay
         budget-comparable with plain ones."""
         cfg = self.cfg
-        per_round = algo.evals_per_gen * cfg.n_islands * cfg.sync_every
-        budget = cfg.max_evals - algo.init_evals * cfg.n_islands
+        per_round = per_gen_total * cfg.sync_every
+        budget = cfg.max_evals - init_total
         if polish_per_point <= 0 or cfg.polish == "none":
             return max(1, budget // max(per_round, 1)), per_round, 0, 0
         # top-k is clamped to the island population in _polish; charge the same
@@ -354,11 +449,13 @@ class IslandOptimizer:
                 hi = mid - 1
         return lo, per_round, lo // every, per_polish
 
-    def _single_fn(self, f: Function) -> tuple[MetaHeuristic, Callable, int]:
+    def _single_fn(self, f: Function) -> tuple[Any, Callable, int]:
         """Cached (algo, jitted device-resident run, polish evals/point) for
         ``f`` — repeated ``minimize`` calls on one optimizer reuse the
-        compiled program instead of re-tracing a fresh closure every call."""
-        ck = ("single", f.name, id(f.fn), id(f.shift), f.bias)
+        compiled program instead of re-tracing a fresh closure every call.
+        Keyed by ``Function.cache_token()`` — a GC-stable identity token, so
+        a recycled ``id()`` can never silently serve a stale program."""
+        ck = ("single", *f.cache_token())
         hit = self._many_cache.get(ck)
         if hit is not None and hit[0] is f.fn:
             return hit[1], hit[2], hit[3]
@@ -386,10 +483,14 @@ class IslandOptimizer:
         else:
             algo, run = self._build(f), None
             polish_pass, pp = self._polish(f)
-        n_rounds, per_round, n_polish, per_polish = self._budget(algo, pp)
+        per_gen_total, init_total = self._eval_totals(algo)
+        n_rounds, per_round, n_polish, per_polish = self._budget(
+            per_gen_total, init_total, pp)
 
         key, ik = jax.random.split(key)
-        if cfg.n_islands > 1:
+        if cfg.portfolio:
+            state = algo.init_stacked(jax.random.split(ik, cfg.n_islands))
+        elif cfg.n_islands > 1:
             init_keys = jax.random.split(ik, cfg.n_islands)
             state = jax.vmap(algo.init)(init_keys)
         else:
@@ -422,8 +523,7 @@ class IslandOptimizer:
                 arg, val = _select_best(state, cfg.n_islands > 1)
                 history = np.asarray(history, dtype=np.float32)
 
-        n_evals = (algo.init_evals * cfg.n_islands + n_rounds * per_round
-                   + n_polish * per_polish)
+        n_evals = (init_total + n_rounds * per_round + n_polish * per_polish)
         return OptimizeResult(
             arg=arg, value=float(val), n_evals=n_evals,
             n_gens=n_rounds * cfg.sync_every, history=history,
@@ -448,7 +548,7 @@ class IslandOptimizer:
         for all J jobs, and only the final selection runs on the reassembled
         global state — the sharded analogue of the same program.
         """
-        ck = (f.name, id(f.fn), id(f.shift), f.bias)
+        ck = ("many", *f.cache_token())
         hit = self._many_cache.get(ck)
         if hit is not None and hit[0] is f.fn:
             return hit[1], hit[2], hit[3]
@@ -456,7 +556,7 @@ class IslandOptimizer:
         cfg = self.cfg
         algo = self._build(f)
         polish_pass, pp = self._polish(f)
-        n_rounds, _, _, _ = self._budget(algo, pp)
+        n_rounds, _, _, _ = self._budget(*self._eval_totals(algo), pp)
         stacked = cfg.n_islands > 1
 
         if self._island_mesh is None:
@@ -464,7 +564,10 @@ class IslandOptimizer:
 
             def one_job(k: Array) -> tuple[Array, Array, Array]:
                 key, ik = jax.random.split(k)
-                if stacked:
+                if cfg.portfolio:
+                    state = algo.init_stacked(
+                        jax.random.split(ik, cfg.n_islands))
+                elif stacked:
                     state = jax.vmap(algo.init)(
                         jax.random.split(ik, cfg.n_islands))
                 else:
@@ -482,7 +585,15 @@ class IslandOptimizer:
                 iks = jax.random.split(ik, cfg.n_islands)
                 if n_shards > 1:
                     iks = _local_rows(iks, axis, n_local)
-                state = jax.vmap(algo.init)(iks)
+                if cfg.portfolio:
+                    br = None
+                    if algo.n_branches > 1:
+                        br = jnp.asarray(algo.branch_of)
+                        if n_shards > 1:
+                            br = _local_rows(br, axis, n_local)
+                    state = algo.init_stacked(iks, br)
+                else:
+                    state = jax.vmap(algo.init)(iks)
                 return scan_rounds(state, _chain_split(key, n_rounds))
 
             sharded = mesh_mod.shard_map(
@@ -511,7 +622,9 @@ class IslandOptimizer:
             raise ValueError("minimize_many is device-resident only; "
                              "round_callback requires per-job minimize calls")
         algo, many, pp = self._many_fn(f)
-        n_rounds, per_round, n_polish, per_polish = self._budget(algo, pp)
+        per_gen_total, init_total = self._eval_totals(algo)
+        n_rounds, per_round, n_polish, per_polish = self._budget(
+            per_gen_total, init_total, pp)
 
         keys = jnp.asarray(keys)
         n_jobs = keys.shape[0]
@@ -532,8 +645,7 @@ class IslandOptimizer:
         with ctx:
             args, vals, hists = jax.device_get(many(keys))
 
-        n_evals = (algo.init_evals * cfg.n_islands + n_rounds * per_round
-                   + n_polish * per_polish)
+        n_evals = (init_total + n_rounds * per_round + n_polish * per_polish)
         return [
             OptimizeResult(
                 arg=args[j], value=float(vals[j]), n_evals=n_evals,

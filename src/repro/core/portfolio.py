@@ -1,0 +1,415 @@
+"""Unified-state policy registry — heterogeneous algorithm portfolios for the
+island engine (DESIGN.md §10).
+
+popt4jlib's headline architectural claim is that ``OptimizerIntf`` lets
+*different* meta-heuristics cooperate on one problem: the paper's Fig.4 runs
+DGA, DDE, DPSO, DSA, DFA and DGABH side by side because no single method
+dominates across functions. The engine reproduces that scenario *inside* the
+compiled round scan: every registered policy declares its auxiliary state
+slots (PSO velocity, SA temperature, GA ages, ...), the slots are padded into
+one common pytree schema shared by all eight algorithms, and the per-island
+generation step dispatches through ``lax.switch`` over the portfolio's
+policies — so a mixed DE+PSO+SA island set runs as ONE jitted ``lax.scan``,
+composing with ring/starvation migration, incumbent sharing, the hybrid
+polish cadence and ``shard_map`` island sharding.
+
+Schema (the *unified state*, per island):
+
+    pop (P, D)  fit (P,)  best_arg (D,)  best_val ()      — common, every policy
+    alive (P,) bool                                       — common liveness mask
+                                                            (GA aging; all-True
+                                                            for other policies)
+    aux_vec (NV, P, D)  aux_ind (NP, P)  aux_scl (NS,)    — declared slots,
+                                                            zero-padded to the
+                                                            registry-wide maxima
+
+``NV``/``NP``/``NS`` are maxima over the whole registry, so every portfolio —
+and every branch of the ``lax.switch`` — shares one pytree structure.
+
+Migration carries position + fitness only. When an island adopts a migrant,
+the destination policy's aux slots *re-initialize* per the slot's declared
+``adopt`` rule (``zero`` | ``pos`` | ``fit`` | ``keep``): a PSO island zeroes
+the adopted particle's velocity and restarts its personal best at the
+migrant's position; a GA island resets the age and revives the slot's
+``alive`` bit. Per-island scalars (SA temperature, EA sigma, FA alpha) are
+never touched by adoption.
+
+``algo_id`` values are frozen — they identify policies across processes and
+in serialized requests, so NEVER renumber an existing entry.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bh, de, ea, fa, ga, mc, pso, sa
+from repro.core.islands import AlgoMaker, MetaHeuristic, State
+from repro.functions.benchmarks import Function
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AuxSlot:
+    """One declared auxiliary state slot of a policy.
+
+    ``kind`` places it in the unified schema: ``vec`` is per-individual
+    ``(P, D)``, ``ind`` is per-individual scalar ``(P,)``, ``scl`` is one
+    per-island scalar. ``adopt`` is the migration re-init rule applied to the
+    slot's adopted rows (``zero`` | ``pos`` = copy the migrant's position |
+    ``fit`` = copy the migrant's fitness | ``keep``); scalars are never
+    re-initialized (adoption is per-individual).
+    """
+
+    name: str
+    kind: str          # "vec" | "ind" | "scl"
+    adopt: str = "keep"
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicySpec:
+    """Registry entry: a meta-heuristic plus its unified-schema declaration.
+
+    ``algo_id`` is the policy's stable wire identity (frozen forever);
+    ``maker`` is the per-island factory (``de.make``-style); ``slots`` the
+    aux slots its native state carries beyond the common pop/fit/best keys;
+    ``needs_alive`` marks policies whose native state owns the ``alive``
+    liveness mask (GA aging) rather than inheriting the all-True common one.
+    """
+
+    name: str
+    algo_id: int
+    maker: AlgoMaker
+    slots: tuple[AuxSlot, ...] = ()
+    needs_alive: bool = False
+
+
+REGISTRY: dict[str, PolicySpec] = {}
+
+
+def register(spec: PolicySpec) -> None:
+    """Add a policy to the registry; name and algo_id must both be unused."""
+    if any(s.kind not in ("vec", "ind", "scl") for s in spec.slots):
+        raise ValueError(f"{spec.name}: unknown slot kind")
+    if spec.name in REGISTRY:
+        raise ValueError(f"policy {spec.name!r} already registered")
+    if any(p.algo_id == spec.algo_id for p in REGISTRY.values()):
+        raise ValueError(f"algo_id {spec.algo_id} already taken")
+    REGISTRY[spec.name] = spec
+
+
+# The eight policies of the paper's Fig.4 portfolio. algo_ids are frozen.
+register(PolicySpec("de", 0, de.make))
+register(PolicySpec("ga", 1, ga.make, slots=(
+    AuxSlot("age", "ind", adopt="zero"),        # migrants arrive newborn
+    AuxSlot("age_limit", "ind", adopt="keep"),  # slot keeps its drawn limit
+), needs_alive=True))
+register(PolicySpec("pso", 2, pso.make, slots=(
+    AuxSlot("vel", "vec", adopt="zero"),        # adopted particle starts at rest
+    AuxSlot("pbest", "vec", adopt="pos"),       # personal best restarts at the
+    AuxSlot("pbest_f", "ind", adopt="fit"),     # migrant's position/fitness
+)))
+register(PolicySpec("sa", 3, sa.make, slots=(AuxSlot("t", "scl"),)))
+register(PolicySpec("ea", 4, ea.make, slots=(AuxSlot("sigma", "scl"),)))
+register(PolicySpec("fa", 5, fa.make, slots=(AuxSlot("alpha", "scl"),)))
+register(PolicySpec("bh", 6, bh.make))
+register(PolicySpec("mc", 7, mc.make))
+
+
+def schema() -> tuple[int, int, int]:
+    """(NV, NP, NS) — aux slot counts of the unified schema: per-kind maxima
+    over the whole registry, so every portfolio shares one pytree structure."""
+    nv = np_ = ns = 0
+    for spec in REGISTRY.values():
+        nv = max(nv, sum(1 for s in spec.slots if s.kind == "vec"))
+        np_ = max(np_, sum(1 for s in spec.slots if s.kind == "ind"))
+        ns = max(ns, sum(1 for s in spec.slots if s.kind == "scl"))
+    return nv, np_, ns
+
+
+def expand(portfolio: tuple[str, ...], n_islands: int) -> tuple[str, ...]:
+    """Per-island policy names from a portfolio spec: used as-is when its
+    length equals ``n_islands``, cycled round-robin when shorter (so
+    ``("de", "pso", "sa")`` over 6 islands interleaves the three policies —
+    ring neighbours run different algorithms). A spec LONGER than the island
+    count is rejected: silently dropping requested policies would run a
+    different portfolio than the one submitted."""
+    if not portfolio:
+        raise ValueError("empty portfolio")
+    unknown = [n for n in portfolio if n not in REGISTRY]
+    if unknown:
+        raise ValueError(
+            f"unknown portfolio policies {unknown}; registered: "
+            f"{sorted(REGISTRY)}")
+    if len(portfolio) > n_islands:
+        raise ValueError(
+            f"portfolio names {len(portfolio)} policies but there are only "
+            f"{n_islands} islands — raise n_islands or drop policies")
+    if len(portfolio) == n_islands:
+        return tuple(portfolio)
+    return tuple(portfolio[i % len(portfolio)] for i in range(n_islands))
+
+
+class UnifiedPolicy:
+    """One policy instance adapted to the unified state schema.
+
+    Wraps the policy's native ``MetaHeuristic`` (dict state with its own
+    keys) in pack/unpack shims so ``init``/``gen`` consume and produce the
+    common schema — the pytree every ``lax.switch`` branch must share. The
+    wrapped arithmetic and key discipline are untouched, which is what makes
+    a homogeneous portfolio bit-identical to the plain engine.
+    """
+
+    def __init__(self, spec: PolicySpec, algo: MetaHeuristic,
+                 pop: int, dim: int) -> None:
+        self.spec = spec
+        self.algo = algo
+        self.pop = pop
+        self.dim = dim
+        self._nv, self._np, self._ns = schema()
+
+    # -- schema shims ------------------------------------------------------
+
+    def _pack(self, d: State, base: State | None = None) -> State:
+        """Native policy state -> unified state. Aux slots the policy does
+        not declare are zero-padded on every pack — nothing ever writes an
+        island's undeclared slots, so re-zeroing is both correct and free of
+        a carried dependency; ``base`` only supplies the common ``alive``
+        mask for policies that do not own one."""
+        P, D = self.pop, self.dim
+        zv = jnp.zeros((P, D), jnp.float32)
+        zp = jnp.zeros((P,), jnp.float32)
+        vecs = [d[s.name] for s in self.spec.slots if s.kind == "vec"]
+        inds = [d[s.name].astype(jnp.float32)
+                for s in self.spec.slots if s.kind == "ind"]
+        scls = [jnp.asarray(d[s.name], jnp.float32)
+                for s in self.spec.slots if s.kind == "scl"]
+        vecs += [zv] * (self._nv - len(vecs))
+        inds += [zp] * (self._np - len(inds))
+        scls += [jnp.zeros((), jnp.float32)] * (self._ns - len(scls))
+        if self.spec.needs_alive:
+            alive = d["alive"]
+        else:
+            alive = (base["alive"] if base is not None
+                     else jnp.ones((P,), bool))
+        return {
+            "pop": d["pop"], "fit": d["fit"], "alive": alive,
+            "best_arg": d["best_arg"], "best_val": d["best_val"],
+            "aux_vec": jnp.stack(vecs) if self._nv else jnp.zeros((0, P, D)),
+            "aux_ind": jnp.stack(inds) if self._np else jnp.zeros((0, P)),
+            "aux_scl": jnp.stack(scls) if self._ns else jnp.zeros((0,)),
+        }
+
+    def _unpack(self, u: State) -> State:
+        """Unified state -> exactly the native keys the wrapped policy's
+        ``gen`` expects (its output dicts list their keys explicitly, so
+        extra keys would be silently dropped — hence the exact set)."""
+        d = {"pop": u["pop"], "fit": u["fit"],
+             "best_arg": u["best_arg"], "best_val": u["best_val"]}
+        if self.spec.needs_alive:
+            d["alive"] = u["alive"]
+        vi = pi = si = 0
+        for s in self.spec.slots:
+            if s.kind == "vec":
+                d[s.name] = u["aux_vec"][vi]
+                vi += 1
+            elif s.kind == "ind":
+                d[s.name] = u["aux_ind"][pi]
+                pi += 1
+            else:
+                d[s.name] = u["aux_scl"][si]
+                si += 1
+        return d
+
+    # -- unified interface -------------------------------------------------
+
+    def init(self, key: Array) -> State:
+        """Unified-schema single-island init (wraps the native init)."""
+        return self._pack(self.algo.init(key))
+
+    def gen(self, u: State, key: Array) -> State:
+        """Unified-schema generation step — a ``lax.switch`` branch body."""
+        step = (self.algo.step_override if self.algo.step_override is not None
+                else self.algo.gen)
+        return self._pack(step(self._unpack(u), key), base=u)
+
+    def adopt(self, u: State, mask: Array) -> State:
+        """Re-initialize aux slots of adopted migrants (DESIGN.md §10).
+
+        ``mask (P,)`` marks slots whose pop/fit changed in this round's
+        migration. Every policy revives adopted slots (``alive |= mask``);
+        declared slots apply their ``adopt`` rule. Runs as a ``lax.switch``
+        branch, so it returns the full unified state.
+        """
+        av, ap = u["aux_vec"], u["aux_ind"]
+        vi = pi = 0
+        for s in self.spec.slots:
+            if s.kind == "vec":
+                if s.adopt == "zero":
+                    av = av.at[vi].set(jnp.where(mask[:, None], 0.0, av[vi]))
+                elif s.adopt == "pos":
+                    av = av.at[vi].set(jnp.where(mask[:, None], u["pop"], av[vi]))
+                vi += 1
+            elif s.kind == "ind":
+                if s.adopt == "zero":
+                    ap = ap.at[pi].set(jnp.where(mask, 0.0, ap[pi]))
+                elif s.adopt == "fit":
+                    ap = ap.at[pi].set(jnp.where(mask, u["fit"], ap[pi]))
+                pi += 1
+        return {**u, "alive": u["alive"] | mask, "aux_vec": av, "aux_ind": ap}
+
+
+def adopt_native(name: str, state: State, mask: Array) -> State:
+    """Apply a registered policy's migrant adopt rules to its NATIVE state
+    dict — the plain (``algo_maker``) engine's analogue of
+    :meth:`UnifiedPolicy.adopt`, so homogeneous portfolios and the plain
+    engine share one adoption semantic (DESIGN.md §10): revive + age-reset
+    for ga, velocity/pbest re-init for pso, no-op for slot-less policies.
+    Unregistered custom policies fall back to the alive-revive alone.
+    """
+    out = dict(state)
+    if "alive" in out:
+        out["alive"] = out["alive"] | mask
+    spec = REGISTRY.get(name)
+    if spec is None:
+        return out
+    for s in spec.slots:
+        if s.name not in out:
+            continue
+        if s.kind == "vec":
+            if s.adopt == "zero":
+                out[s.name] = jnp.where(mask[:, None], 0.0, out[s.name])
+            elif s.adopt == "pos":
+                out[s.name] = jnp.where(mask[:, None], out["pop"], out[s.name])
+        elif s.kind == "ind":
+            if s.adopt == "zero":
+                out[s.name] = jnp.where(mask, 0.0, out[s.name])
+            elif s.adopt == "fit":
+                out[s.name] = jnp.where(mask, out["fit"], out[s.name])
+    return out
+
+
+def has_adopt_state(name: str) -> bool:
+    """Whether a policy carries per-individual state that migration adoption
+    must touch — decides if the plain engine computes the adopted mask."""
+    spec = REGISTRY.get(name)
+    return spec is not None and (
+        spec.needs_alive or any(s.kind in ("vec", "ind") for s in spec.slots))
+
+
+class Portfolio:
+    """A built per-island policy assignment: the engine-facing object.
+
+    ``names`` holds one policy name per island; ``policies`` one
+    :class:`UnifiedPolicy` per *distinct* policy (the ``lax.switch`` branch
+    table, in order of first appearance); ``branch_of`` maps island ->
+    branch index. All stacked entry points take an optional ``branch``
+    override so the sharded engine can pass each shard's local block of the
+    (static, replicated) table.
+
+    With a single distinct policy the switch is skipped entirely and the
+    branch body is dispatched directly — the homogeneous portfolio therefore
+    compiles to the same per-island program as the plain engine, which is
+    what the bit-identity contract (DESIGN.md §10) rests on.
+    """
+
+    def __init__(self, names: tuple[str, ...],
+                 policies: list[UnifiedPolicy]) -> None:
+        self.names = names
+        self.policies = policies
+        order = [p.spec.name for p in policies]
+        self.branch_of = np.asarray([order.index(n) for n in names],
+                                    dtype=np.int32)
+        self.algo_ids = tuple(REGISTRY[n].algo_id for n in names)
+        # Islands whose policy owns the alive mask (ga aging); the engine's
+        # migration pass uses isfinite(fit) for the rest, matching the plain
+        # engine's alive=None default (DESIGN.md §10).
+        self.owns_alive = np.asarray(
+            [REGISTRY[n].needs_alive for n in names])
+
+    @property
+    def n_branches(self) -> int:
+        """Distinct policies in the portfolio (the switch branch count)."""
+        return len(self.policies)
+
+    @property
+    def per_gen_total(self) -> int:
+        """Function evaluations one generation costs across all islands —
+        the heterogeneous analogue of ``evals_per_gen * n_islands``."""
+        return sum(self.policies[b].algo.evals_per_gen for b in self.branch_of)
+
+    @property
+    def init_total(self) -> int:
+        """Function evaluations initialization costs across all islands."""
+        return sum(self.policies[b].algo.init_evals for b in self.branch_of)
+
+    def _branches(self, branch: Array | None) -> Array:
+        return jnp.asarray(self.branch_of) if branch is None else branch
+
+    def init_stacked(self, keys: Array, branch: Array | None = None) -> State:
+        """Island-stacked unified init: one key row per island, dispatched
+        through ``lax.switch`` (direct call when homogeneous)."""
+        if self.n_branches == 1:
+            return jax.vmap(self.policies[0].init)(keys)
+        inits = [p.init for p in self.policies]
+        return jax.vmap(
+            lambda k, b: jax.lax.switch(b, inits, k))(keys, self._branches(branch))
+
+    def step_stacked(self, state: State, keys: Array,
+                     branch: Array | None = None) -> State:
+        """One generation for every island: per-island ``lax.switch`` over
+        the branch table — the heterogeneous ``vmap(gen)``."""
+        if self.n_branches == 1:
+            return jax.vmap(self.policies[0].gen)(state, keys)
+        gens = [p.gen for p in self.policies]
+        return jax.vmap(
+            lambda s, k, b: jax.lax.switch(b, gens, s, k))(
+                state, keys, self._branches(branch))
+
+    def adopt_stacked(self, state: State, mask: Array,
+                      branch: Array | None = None) -> State:
+        """Apply each island's policy-specific migrant aux re-init
+        (:meth:`UnifiedPolicy.adopt`) after a migration exchange."""
+        if self.n_branches == 1:
+            return jax.vmap(self.policies[0].adopt)(state, mask)
+        adopts = [p.adopt for p in self.policies]
+        return jax.vmap(
+            lambda s, m, b: jax.lax.switch(b, adopts, s, m))(
+                state, mask, self._branches(branch))
+
+
+def build_portfolio(
+    names: tuple[str, ...],
+    f: Function,
+    evaluator: Callable[[Array], Array],
+    pop: int,
+    dim: int,
+    params: dict[str, Any] | None = None,
+) -> Portfolio:
+    """Materialize a per-island policy assignment into a :class:`Portfolio`.
+
+    ``names`` is the expanded (length ``n_islands``) assignment from
+    :func:`expand`. ``params`` maps policy name -> extra maker kwargs (a
+    dict, or the pair-tuple form JSONL requests freeze it to); entries for
+    policies outside the portfolio are rejected so typos fail loudly.
+    """
+    params = dict(params or {})
+    distinct = list(dict.fromkeys(names))
+    extra = set(params) - set(distinct)
+    if extra:
+        raise ValueError(
+            f"params for policies not in the portfolio: {sorted(extra)} "
+            f"(portfolio: {distinct})")
+    policies = []
+    for n in distinct:
+        kw = params.get(n, {})
+        if not isinstance(kw, dict):   # OptRequest freezes dicts to pairs
+            kw = dict(kw)
+        spec = REGISTRY[n]
+        algo = spec.maker(f=f, evaluator=evaluator, pop=pop, dim=dim, **kw)
+        policies.append(UnifiedPolicy(spec, algo, pop, dim))
+    return Portfolio(tuple(names), policies)

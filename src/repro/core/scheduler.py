@@ -15,7 +15,10 @@ via the executor cache) is reused across flushes.
 Hybrid memetic requests (``OptRequest.polish != "none"``, DESIGN.md §6) bucket
 separately from plain ones: the polish fields are part of the shape-class, so
 a mixed hybrid/plain traffic stream can never collide two different compiled
-programs into one bucket.
+programs into one bucket. Portfolio requests (``OptRequest.portfolio``,
+DESIGN.md §10) follow the same rule — the per-island policy assignment is
+compiled into the program's ``lax.switch`` branch table, so portfolio and
+homogeneous jobs (or two different portfolios) never share a bucket either.
 
 POLO-style policy/execution separation: the algorithms never learn whether
 they ran standalone, under the scheduler, or sharded over a mesh.
@@ -123,8 +126,12 @@ class ShapeBucketScheduler:
                 n_migrants=req.n_migrants, share_incumbent=req.share_incumbent,
                 max_evals=req.max_evals, polish=req.polish,
                 polish_every=req.polish_every, polish_topk=req.polish_topk,
-                polish_steps=req.polish_steps,
+                polish_steps=req.polish_steps, portfolio=req.portfolio,
             )
+            # Portfolio requests (DESIGN.md §10) run heterogeneous per-island
+            # policies: `algo` is ignored and `params` maps policy name ->
+            # kwargs (build_portfolio thaws the frozen pair-tuples).
+            maker = None if req.portfolio else ALGORITHMS[req.algo]
             # Sharded requests (devices > 1, DESIGN.md §8) get their own
             # island mesh; MeshConfig.build raises inside flush_bucket's
             # fault isolation when the host lacks the devices, so one
@@ -132,7 +139,7 @@ class ShapeBucketScheduler:
             mesh_cfg = (MeshConfig(devices=req.devices)
                         if req.devices > 1 else None)
             opt = IslandOptimizer(
-                ALGORITHMS[req.algo], cfg, params=dict(req.params),
+                maker, cfg, params=dict(req.params),
                 mesh=None if mesh_cfg is not None else self.mesh,
                 mesh_cfg=mesh_cfg,
                 exec_cfg=dataclasses.replace(self.exec_cfg, backend=req.backend),

@@ -12,12 +12,49 @@ Number of Active Faces, Nonsmooth Generalized Brown 2.
 from __future__ import annotations
 
 import dataclasses
+import itertools
+import weakref
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jax.Array
+
+# Stable identity tokens for objective callables (see fn_token). Weak
+# references, so tokening an objective never extends its lifetime; the
+# counter is monotonic, so a token value is never reused even after the
+# callable is garbage-collected — unlike id(), which CPython recycles.
+_FN_TOKENS: "weakref.WeakKeyDictionary[Callable, int]" = weakref.WeakKeyDictionary()
+_FN_TOKEN_PINS: list[tuple[Callable, int]] = []   # non-weakref-able callables
+_FN_TOKEN_COUNTER = itertools.count()
+
+
+def fn_token(fn: Callable) -> int:
+    """GC-stable identity token for an objective callable.
+
+    Compiled-program caches (``core.executor``, ``core.islands``) key on the
+    objective's identity; keying on ``id(fn)`` is unsound because CPython
+    reuses addresses after garbage collection, which can silently serve a
+    program compiled for a dead objective. Tokens are drawn from a monotonic
+    counter and held via weak references, so two distinct callables can never
+    share one — alive or dead. Callables that do not support weak references
+    (rare: some builtins/partials) are pinned for the process lifetime.
+    """
+    try:
+        tok = _FN_TOKENS.get(fn)
+        if tok is None:
+            tok = next(_FN_TOKEN_COUNTER)
+            _FN_TOKENS[fn] = tok
+        return tok
+    except TypeError:
+        for obj, tok in _FN_TOKEN_PINS:
+            if obj is fn:
+                return tok
+        tok = next(_FN_TOKEN_COUNTER)
+        _FN_TOKEN_PINS.append((fn, tok))
+        return tok
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +85,17 @@ class Function:
         """Evaluate a (P, dim) population -> (P,) fitness. The paper's distributed
         batch evaluation maps onto vmap (+ sharding at the engine level)."""
         return jax.vmap(self.fn)(pop)
+
+    def cache_token(self) -> tuple:
+        """Stable compiled-program cache key for this objective.
+
+        ``(name, fn_token(fn), shift bytes, bias)`` — the callable's identity
+        via :func:`fn_token` (never recycled, unlike ``id()``) and the shift
+        by *content*, so two shifted variants sharing one base callable can
+        never collide on a reused array address.
+        """
+        shift = None if self.shift is None else np.asarray(self.shift).tobytes()
+        return (self.name, fn_token(self.fn), shift, self.bias)
 
 
 # ---------------------------------------------------------------------------

@@ -23,6 +23,16 @@ compiled shape-class:
                                  "polish": "asd", "polish_every": 3,
                                  "polish_topk": 2, "polish_steps": 2, "seed": 0}}
 
+Heterogeneous portfolio jobs (DESIGN.md §10) submit a per-island policy list
+(cycled over the islands) instead of a single ``algo``; ``params`` then maps
+policy name -> kwargs. The portfolio joins the shape-class, so two different
+portfolios never collide into one compiled bucket:
+
+    {"op": "submit", "request": {"fn": "rastrigin", "dim": 12, "n_islands": 6,
+                                 "portfolio": ["de", "pso", "sa"],
+                                 "params": {"sa": {"T0": 100.0}},
+                                 "max_evals": 20000, "seed": 0}}
+
 Device-sharded jobs (DESIGN.md §8) work the same way — ``devices`` is an
 ordinary request field that joins the shape-class, so sharded and
 single-device traffic never mix buckets and the service loop needs no

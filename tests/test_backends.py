@@ -162,3 +162,62 @@ def test_fused_de_rejects_best1bin_and_unregistered():
     with pytest.raises(KeyError):
         de.make(f=wf, evaluator=make_batch_evaluator(wf, ExecutorConfig()),
                 pop=8, dim=4, fused=True)
+
+
+# --- GC-stable compiled-program cache keys -----------------------------------
+
+def test_fn_token_is_stable_and_never_recycled():
+    """fn_token replaces id() in cache keys: stable per live callable, unique
+    across callables, and never reused after GC (the id()-recycling hazard
+    that could silently serve a stale compiled program)."""
+    import gc
+    from repro.functions.benchmarks import fn_token
+
+    def f(x):
+        return x
+
+    def g(x):
+        return x
+
+    assert fn_token(f) == fn_token(f)
+    assert fn_token(f) != fn_token(g)
+    dead_tok = fn_token(g)
+    del g
+    gc.collect()
+
+    def h(x):
+        return x
+
+    assert fn_token(h) != dead_tok           # monotonic counter, no recycling
+
+
+def test_cache_token_keys_on_shift_content():
+    """Two objectives sharing one callable but carrying different shifts must
+    key differently — the id(shift)-reuse case that used to be able to serve
+    a program compiled for the wrong shift."""
+    import dataclasses
+    f1 = make_shifted_rosenbrock(6, seed=1)
+    f2 = dataclasses.replace(f1, shift=f1.shift + 1.0)
+    assert f1.cache_token() != f2.cache_token()
+    assert f1.cache_token() == f1.cache_token()
+    # and the evaluator cache respects it: different shifts, different
+    # compiled pallas programs (same callable identity either way)
+    cfg = ExecutorConfig(backend="pallas")
+    e1 = make_batch_evaluator(f1, cfg)
+    e2 = make_batch_evaluator(f2, cfg)
+    assert e1 is not e2
+    assert make_batch_evaluator(f1, cfg) is e1   # and still memoizes
+
+
+def test_single_optimizer_run_cache_hits_across_calls():
+    """IslandOptimizer's per-objective program cache: same Function object ->
+    cached jitted run; equal-content clone -> same token class but distinct
+    fn identity, so it rebuilds instead of serving the stale closure."""
+    f = get("sphere", 4)
+    cfg = IslandConfig(n_islands=2, pop=8, dim=4, sync_every=2, max_evals=600)
+    opt = IslandOptimizer(ALGORITHMS["de"], cfg)
+    r1 = opt.minimize(f, KEY)
+    n_cached = len(opt._many_cache)
+    r2 = opt.minimize(f, KEY)
+    assert len(opt._many_cache) == n_cached  # second call reused the program
+    assert r1.value == r2.value

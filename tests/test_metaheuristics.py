@@ -172,3 +172,44 @@ def test_history_monotone():
     res = IslandOptimizer(ALGORITHMS["de"], cfg).minimize(SPHERE, KEY)
     hist = res.history
     assert all(hist[i + 1] <= hist[i] + 1e-9 for i in range(len(hist) - 1))
+
+
+# --- eval accounting parity (all eight registered policies) ------------------
+
+# Non-default pop (!= the paper's P=50 FA default, not divisible by chunked
+# DE's n_chunks) so shape-dependent accounting bugs cannot hide.
+PARITY_CASES = [(name, {}) for name in sorted(ALGORITHMS)] + [
+    ("de", {"barrier_mode": "chunked", "n_chunks": 8}),
+]
+
+
+@pytest.mark.parametrize("name,params", PARITY_CASES,
+                         ids=[n + ("-chunked" if p else "") for n, p in PARITY_CASES])
+def test_evals_per_gen_parity(name, params):
+    """Charged accounting == actual evaluator rows, per init and per
+    generation, for every registered policy: fa's O(P^2) pairwise attraction
+    must stay eval-free (exactly pop rows per gen at any pop), and chunked
+    DE must charge its clamped-slice overlap (csz * n_chunks rows, not pop).
+    """
+    from repro.functions import get
+    pop, dim = 37, 5
+    f = get("sphere", dim)
+    counted: list[int] = []
+
+    def counting_evaluator(p):
+        n = p.shape[0]                       # static: rows per evaluator call
+        jax.debug.callback(lambda: counted.append(n))
+        return jnp.sum(p * p, axis=-1)
+
+    algo = ALGORITHMS[name](f=f, evaluator=counting_evaluator,
+                            pop=pop, dim=dim, **params)
+    barrier = getattr(jax, "effects_barrier", lambda: None)
+
+    state = jax.block_until_ready(algo.init(jax.random.PRNGKey(0)))
+    barrier()
+    assert sum(counted) == algo.init_evals, (name, counted)
+
+    counted.clear()
+    jax.block_until_ready(algo.gen(state, jax.random.PRNGKey(1)))
+    barrier()
+    assert sum(counted) == algo.evals_per_gen, (name, counted)

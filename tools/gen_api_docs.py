@@ -28,6 +28,7 @@ MODULES = (
     "repro.core.pipeline",
     "repro.core.mesh",
     "repro.core.migration",
+    "repro.core.portfolio",
     "repro.core.coupling",
     "repro.core.de",
     "repro.core.ga",
