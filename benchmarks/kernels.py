@@ -1,0 +1,142 @@
+"""Fused-kernel vs unfused-XLA generation throughput, across policies and
+shape classes. Writes ``BENCH_kernels.json`` (the fused-kernel perf artifact;
+CI uploads the --smoke variant).
+
+    PYTHONPATH=src python benchmarks/kernels.py            # full
+    PYTHONPATH=src python benchmarks/kernels.py --smoke    # CI-sized
+
+For each (policy, function, shape) cell both sides run the SAME policy
+construction — ``make(...)`` vs ``make(..., fused=True)`` — stepped under
+``jax.jit`` from one shared initial state with the same key chain, so the
+speedup isolates the fused Pallas generation kernel (autotuned tiles via
+``kernels.autotune``) against the per-op XLA pipeline plus the executor's
+retry-eval. Per-cell time is the best of ``--reps`` timed windows (medians of
+noisy CPU runs understate steady state); generations/sec follow directly. A
+parity probe asserts the first fused generation matches the unfused one, so a
+speedup can never come from computing something else.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ExecutorConfig, ga, pso
+from repro.core.executor import make_batch_evaluator
+from repro.functions import get
+
+POLICIES = {"pso": pso.make, "ga": ga.make}
+
+
+def _time_gens(step, state, key, n_gens: int, reps: int) -> float:
+    """Best-of-``reps`` seconds per generation for a step function run as a
+    jitted ``lax.scan`` block of ``n_gens`` generations — the same shape the
+    island engine executes (device-resident rounds), so per-generation host
+    dispatch does not dilute the kernel-vs-XLA ratio."""
+
+    @jax.jit
+    def block(s, k):
+        keys = jax.random.split(k, n_gens)
+        return jax.lax.scan(lambda c, kk: (step(c, kk), None), s, keys)[0]
+
+    jax.block_until_ready(block(dict(state), key))   # compile + warm caches
+    best = float("inf")
+    for r in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(block(dict(state), jax.random.fold_in(key, r)))
+        best = min(best, (time.perf_counter() - t0) / n_gens)
+    return best
+
+
+def _parity(plain, fused, state, key) -> float:
+    """Max relative divergence of one fused vs unfused generation (same key)."""
+    sp = jax.jit(plain.gen)(dict(state), key)
+    sf = jax.jit(fused.step_override)(dict(state), key)
+
+    def rel(a, b):
+        a, b = jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32)
+        return float(jnp.max(jnp.abs(a - b) / (jnp.abs(b) + 1.0)))
+
+    return max(rel(sf[k], sp[k]) for k in sp)
+
+
+def bench_cell(policy: str, fn: str, pop: int, dim: int, n_gens: int,
+               reps: int) -> dict:
+    f = get(fn)
+    ev = make_batch_evaluator(f, ExecutorConfig())
+    # GA offspring waves sized to the population so both sides do comparable
+    # per-generation work (the default pop//4 wave times mostly XLA overhead).
+    kw = {"n_offspring": pop} if policy == "ga" else {}
+    maker = POLICIES[policy]
+    plain = maker(f=f, evaluator=ev, pop=pop, dim=dim, **kw)
+    fused = maker(f=f, evaluator=ev, pop=pop, dim=dim, fused=True, **kw)
+    key = jax.random.PRNGKey(0)
+    state = plain.init(key)
+    div = _parity(plain, fused, state, jax.random.fold_in(key, 1))
+    t_un = _time_gens(plain.gen, state, key, n_gens, reps)
+    t_fu = _time_gens(fused.step_override, state, key, n_gens, reps)
+    return {
+        "policy": policy, "fn": fn, "pop": pop, "dim": dim,
+        "gens_per_s_unfused": round(1.0 / t_un, 2),
+        "gens_per_s_fused": round(1.0 / t_fu, 2),
+        "t_unfused_ms": round(t_un * 1e3, 3),
+        "t_fused_ms": round(t_fu * 1e3, 3),
+        "speedup": round(t_un / t_fu, 3),
+        "parity_max_rel": div,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (fewer generations/reps, one shape)")
+    ap.add_argument("--functions", nargs="*",
+                    default=["sphere", "rastrigin", "griewank", "ackley",
+                             "schwefel"])
+    ap.add_argument("--shapes", nargs="*", default=["128x1000"],
+                    help="POPxDIM shape classes, e.g. 128x1000 256x512")
+    ap.add_argument("--gens", type=int, default=30)
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    args = ap.parse_args()
+
+    if args.smoke:
+        args.gens, args.reps = 10, 2
+
+    from repro.kernels import autotune
+    cells = []
+    for shape in args.shapes:
+        pop, dim = (int(x) for x in shape.split("x"))
+        for fn in args.functions:
+            for policy in POLICIES:
+                cell = bench_cell(policy, fn, pop, dim, args.gens, args.reps)
+                cells.append(cell)
+                print(f"{policy:4s} {fn:12s} {pop}x{dim}: "
+                      f"{cell['speedup']:.2f}x "
+                      f"({cell['t_unfused_ms']:.1f} -> "
+                      f"{cell['t_fused_ms']:.1f} ms/gen)")
+    ok = {p: sorted(c["fn"] for c in cells
+                    if c["policy"] == p and c["speedup"] >= 1.3)
+          for p in POLICIES}
+    rec = {
+        "backend": jax.default_backend(),
+        "interpret_mode": jax.default_backend() != "tpu",
+        "gens": args.gens, "reps": args.reps, "smoke": args.smoke,
+        "autotune": autotune.cache_stats(),
+        "cells": cells,
+        "fns_ge_1p3x": ok,
+    }
+    with open(args.out, "w") as fh:
+        json.dump(rec, fh, indent=2)
+        fh.write("\n")
+    print(json.dumps({k: rec[k] for k in rec if k != "cells"}, indent=2))
+    bad = [c for c in cells if c["parity_max_rel"] > 1e-3]
+    if bad:
+        raise SystemExit(f"fused/unfused parity broke: {bad}")
+
+
+if __name__ == "__main__":
+    main()

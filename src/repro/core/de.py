@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from repro.core.islands import MetaHeuristic, State, clip_box, track_best, uniform_init
 from repro.functions.benchmarks import Function
 from repro.kernels import registry as kreg
+from repro.kernels.autotune import KernelConfig
 from repro.kernels.de_step import de_step as _de_step_kernel
 
 Array = jax.Array
@@ -72,6 +73,7 @@ def make(
     n_chunks: int = 8,
     fused: bool = False,               # whole generation in one Pallas kernel
     interpret: bool | None = None,     # fused-kernel interpret mode; None = auto
+    kernel_cfg: KernelConfig | None = None,
 ) -> MetaHeuristic:
     """Differential Evolution per-island policy (DE/rand/1/bin, DE/best/1/bin)."""
     assert strategy in ("rand1bin", "best1bin")
@@ -123,7 +125,6 @@ def make(
         assert strategy == "rand1bin", "fused DE implements DE/rand/1/bin only"
         spec = kreg.get_spec(f.name)   # KeyError if no kernel for this objective
         assert spec.fused_de, f.name
-        interp = (jax.default_backend() != "tpu") if interpret is None else interpret
 
         def gen_fused(state: State, key: Array) -> State:
             # Same key discipline as gen_sync/_trials, so the fused and XLA
@@ -135,7 +136,8 @@ def make(
             new_pop, new_fit = _de_step_kernel(
                 state["pop"], state["fit"], jnp.stack([ra, rb, rc]), u, jrand,
                 fn=spec.eval_tag, shift=f.shift, bias=f.bias,
-                w=w, px=px, lo=lo, hi=hi, interpret=interp,
+                w=w, px=px, lo=lo, hi=hi, interpret=interpret,
+                kernel_cfg=kernel_cfg,
             )
             return track_best(state, new_pop, new_fit)
 

@@ -51,6 +51,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.mesh import shard_map as _shard_map
 from repro.functions.benchmarks import Function
 from repro.kernels import registry as kreg
+from repro.kernels.autotune import KernelConfig
 from repro.kernels.bench_eval import bench_eval as _bench_eval
 
 Array = jax.Array
@@ -68,11 +69,18 @@ class ExecutorConfig:
     retry_eps: float = 1e-6       # perturbation used for the retry evaluation
     mesh_axis: str | tuple[str, ...] | None = None  # population-sharding axis(es)
     interpret: bool | None = None # pallas interpret mode; None = auto (off-TPU)
+    # One KernelConfig threaded to EVERY Pallas kernel entry this config
+    # touches — the pallas eval backend here and the fused generation kernels
+    # the engine builds (islands/portfolio inject it into policy makers).
+    # Unset fields are autotuned per shape-class by kernels.autotune.
+    kernel: KernelConfig = KernelConfig()
 
 
 def _pallas_interpret(cfg: ExecutorConfig) -> bool:
     if cfg.interpret is not None:
         return cfg.interpret
+    if cfg.kernel.interpret is not None:
+        return cfg.kernel.interpret
     return jax.default_backend() != "tpu"
 
 
@@ -82,11 +90,11 @@ def _make_eval_once(f: Function, cfg: ExecutorConfig) -> Callable[[Array], Array
         return lambda pop: jax.vmap(f.fn)(pop)
     if cfg.backend == "pallas":
         spec = kreg.get_spec(f.name)   # KeyError for unregistered functions
-        interpret = _pallas_interpret(cfg)
+        kc = dataclasses.replace(cfg.kernel, interpret=_pallas_interpret(cfg))
 
         def eval_pallas(pop: Array) -> Array:
             return _bench_eval(pop, spec.eval_tag, shift=f.shift,
-                               bias=f.bias, interpret=interpret)
+                               bias=f.bias, kernel_cfg=kc)
 
         return eval_pallas
     raise ValueError(f"unknown backend {cfg.backend!r}; expected one of {BACKENDS}")

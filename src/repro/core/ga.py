@@ -8,6 +8,13 @@ migration is handled by the engine via the ``alive`` mask. Fixed-capacity
 population arrays + liveness masks replace Java's growing/shrinking ArrayLists
 (static shapes for XLA); a dead slot carries +inf fitness and is never selected.
 The island best is exempt from aging (elitism).
+
+``fused=True`` routes the offspring wave — crossover, mutation, evaluation,
+slot-placement selection — through the fused ``kernels.ga_step`` Pallas
+kernel via the engine's ``step_override`` hook; aging, roulette sampling and
+the worst-slot argsort stay in XLA (cross-population ops). Same key
+discipline as the XLA path, so both are bit-comparable on a fixed seed.
+Requires an objective registered in ``kernels.registry``.
 """
 from __future__ import annotations
 
@@ -18,6 +25,9 @@ import jax.numpy as jnp
 
 from repro.core.islands import MetaHeuristic, State, clip_box, uniform_init
 from repro.functions.benchmarks import Function
+from repro.kernels import registry as kreg
+from repro.kernels.autotune import KernelConfig
+from repro.kernels.ga_step import ga_step as _ga_step_kernel
 
 Array = jax.Array
 
@@ -33,6 +43,9 @@ def make(
     n_offspring: int | None = None,
     age_mean: float = 1e9,      # aging disabled by default (Fig.4 single-island runs)
     age_sd: float = 0.0,
+    fused: bool = False,        # offspring wave in one Pallas kernel
+    interpret: bool | None = None,
+    kernel_cfg: KernelConfig | None = None,
 ) -> MetaHeuristic:
     """Genetic Algorithm per-island policy (1-pt crossover, Gaussian mutation,
     optional aging — the paper's DGA island member)."""
@@ -109,4 +122,61 @@ def make(
             "best_arg": jnp.where(better, p[i], state["best_arg"]),
         }
 
-    return MetaHeuristic("ga", init, gen, evals_per_gen=n_off, init_evals=pop)
+    step_override = None
+    if fused:
+        spec = kreg.get_spec(f.name)   # KeyError if no kernel for this objective
+        assert spec.fused_de, f.name
+
+        def gen_fused(state: State, key: Array) -> State:
+            # Identical pre-kernel phases (aging, roulette, draws) and key
+            # discipline as gen; the (n_off, D) crossover/mutation/eval/
+            # placement middle runs in the fused kernel.
+            p, fit = state["pop"], state["fit"]
+            age, limit, alive = state["age"] + 1.0, state["age_limit"], state["alive"]
+            ksel, kcut, kco, kmm, kmn, klim = jax.random.split(key, 6)
+
+            elite = jnp.argmin(jnp.where(alive, fit, jnp.inf))
+            died = alive & (age > limit) & (jnp.arange(pop) != elite)
+            alive = alive & ~died
+            fit = jnp.where(alive, fit, jnp.inf)
+
+            finite = jnp.where(jnp.isfinite(fit), fit, -jnp.inf)
+            worst = jnp.max(finite)
+            wgt = jnp.where(alive, jnp.maximum(worst - fit, 0.0) + 1e-9, 0.0)
+            logw = jnp.log(wgt + 1e-30)
+            parents = jax.random.categorical(ksel, logw, shape=(2, n_off))
+            p1, p2 = p[parents[0]], p[parents[1]]
+
+            cut = jax.random.randint(kcut, (n_off, 1), 1, dim)
+            co = jax.random.uniform(kco, (n_off, 1))
+            um = jax.random.uniform(kmm, (n_off, dim))
+            nz = jax.random.normal(kmn, (n_off, dim))
+
+            order = jnp.argsort(fit)[::-1][:n_off]   # worst n_off slots
+            nslot, nslot_f, take = _ga_step_kernel(
+                p1, p2, p[order], fit[order], cut[:, 0], co[:, 0], um, nz,
+                fn=spec.eval_tag, shift=f.shift, bias=f.bias, pc=pc, pm=pm,
+                sigma_m=sigma_m, lo=lo, hi=hi,
+                interpret=interpret, kernel_cfg=kernel_cfg,
+            )
+            p = p.at[order].set(nslot)
+            fit = fit.at[order].set(nslot_f)
+            age = age.at[order].set(jnp.where(take, 0.0, age[order]))
+            limit = limit.at[order].set(
+                jnp.where(take, draw_limits(klim, n_off).astype(jnp.float32),
+                          limit[order]))
+            alive = alive.at[order].set(alive[order] | take)
+
+            i = jnp.argmin(fit)
+            better = fit[i] < state["best_val"]
+            return {
+                "pop": p, "fit": fit, "age": age, "age_limit": limit,
+                "alive": alive,
+                "best_val": jnp.where(better, fit[i], state["best_val"]),
+                "best_arg": jnp.where(better, p[i], state["best_arg"]),
+            }
+
+        step_override = gen_fused
+
+    return MetaHeuristic("ga", init, gen, evals_per_gen=n_off, init_evals=pop,
+                         step_override=step_override)

@@ -118,6 +118,17 @@ class MetaHeuristic:
 AlgoMaker = Callable[..., MetaHeuristic]
 
 
+def _accepts_kernel_cfg(maker: AlgoMaker) -> bool:
+    """Whether a policy maker declares a ``kernel_cfg`` parameter (the hook
+    the engine uses to thread ``ExecutorConfig.kernel`` into fused kernels).
+    Custom makers without the parameter are simply not injected into."""
+    import inspect
+    try:
+        return "kernel_cfg" in inspect.signature(maker).parameters
+    except (TypeError, ValueError):      # builtins / odd callables
+        return False
+
+
 class IslandOptimizer:
     """popt4jlib OptimizerIntf over the island engine."""
 
@@ -190,17 +201,24 @@ class IslandOptimizer:
 
     def _build(self, f: Function):
         """The per-run policy object: a ``MetaHeuristic`` from ``algo_maker``,
-        or a ``core.portfolio.Portfolio`` in heterogeneous mode."""
+        or a ``core.portfolio.Portfolio`` in heterogeneous mode.
+
+        ``ExecutorConfig.kernel`` is injected as ``kernel_cfg`` into every
+        maker that declares the parameter (explicit per-policy params win), so
+        one threaded :class:`~repro.kernels.autotune.KernelConfig` reaches the
+        fused generation kernels and the pallas eval backend uniformly."""
         cfg = self.cfg
         if cfg.portfolio:
             from repro.core import portfolio as pf  # late: pf imports the algos
             return pf.build_portfolio(
                 pf.expand(cfg.portfolio, cfg.n_islands), f=f,
                 evaluator=self._evaluator(f), pop=cfg.pop, dim=cfg.dim,
-                params=self.params)
+                params=self.params, kernel_cfg=self.exec_cfg.kernel)
+        kw = dict(self.params)
+        if "kernel_cfg" not in kw and _accepts_kernel_cfg(self.algo_maker):
+            kw["kernel_cfg"] = self.exec_cfg.kernel
         return self.algo_maker(
-            f=f, evaluator=self._evaluator(f), pop=cfg.pop, dim=cfg.dim,
-            **self.params
+            f=f, evaluator=self._evaluator(f), pop=cfg.pop, dim=cfg.dim, **kw
         )
 
     def _eval_totals(self, algo) -> tuple[int, int]:

@@ -389,6 +389,7 @@ def build_portfolio(
     pop: int,
     dim: int,
     params: dict[str, Any] | None = None,
+    kernel_cfg: Any = None,
 ) -> Portfolio:
     """Materialize a per-island policy assignment into a :class:`Portfolio`.
 
@@ -396,7 +397,12 @@ def build_portfolio(
     :func:`expand`. ``params`` maps policy name -> extra maker kwargs (a
     dict, or the pair-tuple form JSONL requests freeze it to); entries for
     policies outside the portfolio are rejected so typos fail loudly.
+    ``kernel_cfg`` (a ``kernels.autotune.KernelConfig``, threaded from
+    ``ExecutorConfig.kernel`` by the engine) is injected into every maker
+    that declares the parameter, so fused ``lax.switch`` branches tile
+    consistently; explicit per-policy params win.
     """
+    from repro.core.islands import _accepts_kernel_cfg
     params = dict(params or {})
     distinct = list(dict.fromkeys(names))
     extra = set(params) - set(distinct)
@@ -410,6 +416,9 @@ def build_portfolio(
         if not isinstance(kw, dict):   # OptRequest freezes dicts to pairs
             kw = dict(kw)
         spec = REGISTRY[n]
+        if (kernel_cfg is not None and "kernel_cfg" not in kw
+                and _accepts_kernel_cfg(spec.maker)):
+            kw["kernel_cfg"] = kernel_cfg
         algo = spec.maker(f=f, evaluator=evaluator, pop=pop, dim=dim, **kw)
         policies.append(UnifiedPolicy(spec, algo, pop, dim))
     return Portfolio(tuple(names), policies)

@@ -1,3 +1,7 @@
-from repro.kernels import ops, ref, registry  # noqa: F401
-from repro.kernels.ops import bench_eval, de_step, flash_attention, ssd_scan  # noqa: F401
+from repro.kernels import autotune, ops, ref, registry  # noqa: F401
+from repro.kernels.autotune import KernelConfig  # noqa: F401
+from repro.kernels.ops import (  # noqa: F401
+    bench_eval, de_step, eval_select, flash_attention, ga_step, pso_step,
+    ssd_scan,
+)
 from repro.kernels.registry import KernelSpec, get_spec  # noqa: F401

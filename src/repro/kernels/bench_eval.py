@@ -7,8 +7,13 @@ arrays — for the §V testbed functions listed in ``kernels.registry`` (sphere 
 rastrigin / rosenbrock / ackley / griewank / schwefel / levy / dropwave /
 michalewicz, incl. the CEC'2008 shifted Rosenbrock via a shift operand).
 
-dim is carried whole per tile (the paper's 1000-D padded to 1024 lane-aligned);
-pop_block=8 rows x 1024 dims x 4B = 32 KB live VMEM.
+dim is carried whole per tile (the paper's 1000-D padded to 1024 lane-aligned).
+Tile shapes are no longer hard-coded: ``kernels.autotune`` picks
+``(pop_block, dim_pad)`` per shape-class from the roofline model (explicit
+``pop_block=``/``KernelConfig`` fields still win). Rows added by the
+``pop_block`` round-up are masked to **+inf fitness inside the kernel** — pad
+rows can never win a downstream selection, rather than relying on the caller
+slicing them off.
 """
 from __future__ import annotations
 
@@ -17,6 +22,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import autotune
+from repro.kernels.autotune import KernelConfig
 
 # Objective bodies _eval_tile implements. ``kernels.registry`` maps function
 # *names* to one of these tags (several names may share a tag); this tuple is
@@ -83,34 +91,57 @@ def _eval_tile(x: jax.Array, fn: str, dim: int, bias: float) -> jax.Array:
     raise ValueError(fn)
 
 
-def _kernel(x_ref, shift_ref, o_ref, *, fn: str, dim: int, bias: float):
+def _row_index(pop_block: int) -> jax.Array:
+    """(pop_block,) absolute row index of this grid step (TPU needs >=2D iota)."""
+    base = pl.program_id(0) * pop_block
+    return base + jax.lax.broadcasted_iota(jnp.int32, (pop_block, 1), 0)[:, 0]
+
+
+def _kernel(x_ref, shift_ref, o_ref, *, fn: str, dim: int, bias: float,
+            n_rows: int):
     x = x_ref[...].astype(jnp.float32) - shift_ref[...].astype(jnp.float32)
-    o_ref[...] = _eval_tile(x, fn, dim, bias).astype(o_ref.dtype)
+    fit = _eval_tile(x, fn, dim, bias)
+    # Pad rows from the pop_block round-up carry +inf fitness so they can
+    # never be selected downstream (satellite: no clamp-overlap reliance).
+    row_ok = _row_index(x.shape[0]) < n_rows
+    o_ref[...] = jnp.where(row_ok, fit, jnp.inf).astype(o_ref.dtype)
 
 
 def bench_eval(pop: jax.Array, fn: str, shift: jax.Array | None = None,
-               bias: float = 0.0, pop_block: int = 8, *,
-               interpret: bool = False) -> jax.Array:
-    """pop: (P, D) f32 -> fitness (P,). ``shift``: (D,) offset (CEC'2008)."""
+               bias: float = 0.0, pop_block: int | None = None, *,
+               interpret: bool | None = None,
+               kernel_cfg: KernelConfig | None = None) -> jax.Array:
+    """pop: (P, D) f32 -> fitness (P,). ``shift``: (D,) offset (CEC'2008).
+
+    Tiling comes from ``kernel_cfg`` (a :class:`KernelConfig`, typically
+    threaded from ``ExecutorConfig.kernel``); unset fields are filled by the
+    ``kernels.autotune`` roofline model for this shape-class. Explicit
+    ``pop_block``/``interpret`` keywords override the config.
+    """
     if fn not in EVAL_TAGS:
         raise ValueError(
             f"no kernel body for eval tag {fn!r}; implemented: {EVAL_TAGS} "
             f"(kernels.registry maps function names to these tags)")
     P, D = pop.shape
-    Dp = (D + 127) // 128 * 128
-    Pp = (P + pop_block - 1) // pop_block * pop_block
-    x = jnp.pad(pop, ((0, Pp - P), (0, Dp - D)))
-    s = jnp.zeros((Dp,), pop.dtype) if shift is None else jnp.pad(shift, (0, Dp - D))
-    kernel = functools.partial(_kernel, fn=fn, dim=D, bias=bias)
+    cfg = autotune.resolve(
+        autotune.merge(kernel_cfg, pop_block=pop_block, interpret=interpret),
+        "bench_eval", P, D, tag=fn)
+    dt = jnp.dtype(cfg.dtype)
+    Dp = max(cfg.dim_pad, (D + 127) // 128 * 128)
+    Pp = (P + cfg.pop_block - 1) // cfg.pop_block * cfg.pop_block
+    x = jnp.pad(pop, ((0, Pp - P), (0, Dp - D))).astype(dt)
+    s = jnp.zeros((Dp,), dt) if shift is None else \
+        jnp.pad(shift, (0, Dp - D)).astype(dt)
+    kernel = functools.partial(_kernel, fn=fn, dim=D, bias=bias, n_rows=P)
     out = pl.pallas_call(
         kernel,
-        grid=(Pp // pop_block,),
+        grid=(Pp // cfg.pop_block,),
         in_specs=[
-            pl.BlockSpec((pop_block, Dp), lambda i: (i, 0)),
+            pl.BlockSpec((cfg.pop_block, Dp), lambda i: (i, 0)),
             pl.BlockSpec((1, Dp), lambda i: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((pop_block,), lambda i: (i,)),
+        out_specs=pl.BlockSpec((cfg.pop_block,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((Pp,), jnp.float32),
-        interpret=interpret,
+        interpret=cfg.interpret,
     )(x, s[None, :])
     return out[:P]

@@ -10,7 +10,9 @@ vectors. The naive XLA pipeline materializes mutant + trial + fitness in HBM
 
 Donor rows (pop[a], pop[b], pop[c]) are pre-gathered by the XLA caller —
 random row gather is cheap relative to evaluation and keeps the kernel free of
-cross-tile loads.
+cross-tile loads. Tile shapes come from ``kernels.autotune`` (roofline-scored
+per shape-class) unless pinned by the caller; pad rows from the ``pop_block``
+round-up are excluded from selection in-kernel and surface as +inf fitness.
 """
 from __future__ import annotations
 
@@ -20,12 +22,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.bench_eval import EVAL_TAGS, _eval_tile
+from repro.kernels import autotune
+from repro.kernels.autotune import KernelConfig
+from repro.kernels.bench_eval import EVAL_TAGS, _eval_tile, _row_index
 
 
 def _kernel(pop_ref, fit_ref, pa_ref, pb_ref, pc_ref, u_ref, jr_ref, shift_ref,
             npop_ref, nfit_ref, *, fn: str, dim: int, bias: float,
-            w: float, px: float, lo: float, hi: float):
+            w: float, px: float, lo: float, hi: float, n_rows: int):
     pop = pop_ref[...].astype(jnp.float32)
     fit = fit_ref[...].astype(jnp.float32)
     pa = pa_ref[...].astype(jnp.float32)
@@ -42,49 +46,60 @@ def _kernel(pop_ref, fit_ref, pa_ref, pb_ref, pc_ref, u_ref, jr_ref, shift_ref,
     trial = jnp.where(cross & valid, mutant, pop)
 
     tfit = _eval_tile(trial - shift, fn, dim, bias)
-    better = tfit <= fit[:, 0]
+    row_ok = _row_index(pop.shape[0]) < n_rows
+    # Pad rows never win selection and carry +inf fitness on the way out.
+    better = (tfit <= fit[:, 0]) & row_ok
+    nfit = jnp.where(better, tfit, fit[:, 0])
+    nfit = jnp.where(row_ok, nfit, jnp.inf)
     npop_ref[...] = jnp.where(better[:, None], trial, pop).astype(npop_ref.dtype)
-    nfit_ref[...] = jnp.where(better, tfit, fit[:, 0])[:, None].astype(nfit_ref.dtype)
+    nfit_ref[...] = nfit[:, None].astype(nfit_ref.dtype)
 
 
 def de_step(pop: jax.Array, fit: jax.Array, idx_abc: jax.Array, u: jax.Array,
             jrand: jax.Array, fn: str = "sphere",
             shift: jax.Array | None = None, bias: float = 0.0,
             w: float = 0.5, px: float = 0.2, lo: float = -100.0,
-            hi: float = 100.0, pop_block: int = 128, *,
-            interpret: bool = False):
+            hi: float = 100.0, pop_block: int | None = None, *,
+            interpret: bool | None = None,
+            kernel_cfg: KernelConfig | None = None):
     """One fused DE/rand/1/bin generation.
 
     pop (P, D) f32; fit (P,); idx_abc (3, P) i32 donor indices; u (P, D)
-    uniforms; jrand (P,) i32. Returns (new_pop, new_fit)."""
+    uniforms; jrand (P,) i32. Returns (new_pop, new_fit). Tiling resolves via
+    ``kernel_cfg``/``kernels.autotune`` as in ``bench_eval``."""
     assert fn in EVAL_TAGS, fn  # fused_de gating happens at de.make (by name)
     P, D = pop.shape
-    Dp = (D + 127) // 128 * 128
-    Pp = (P + pop_block - 1) // pop_block * pop_block
-    padPD = lambda a: jnp.pad(a, ((0, Pp - P), (0, Dp - D)))
+    cfg = autotune.resolve(
+        autotune.merge(kernel_cfg, pop_block=pop_block, interpret=interpret),
+        "de_step", P, D, tag=fn)
+    dt = jnp.dtype(cfg.dtype)
+    Dp = max(cfg.dim_pad, (D + 127) // 128 * 128)
+    Pp = (P + cfg.pop_block - 1) // cfg.pop_block * cfg.pop_block
+    padPD = lambda a: jnp.pad(a, ((0, Pp - P), (0, Dp - D))).astype(dt)
     pa, pb, pc = pop[idx_abc[0]], pop[idx_abc[1]], pop[idx_abc[2]]
-    s = jnp.zeros((Dp,), pop.dtype) if shift is None else jnp.pad(shift, (0, Dp - D))
+    s = (jnp.zeros((Dp,), dt) if shift is None
+         else jnp.pad(shift, (0, Dp - D)).astype(dt))
     kernel = functools.partial(_kernel, fn=fn, dim=D, bias=bias, w=w, px=px,
-                               lo=lo, hi=hi)
+                               lo=lo, hi=hi, n_rows=P)
     row = lambda i: (i, 0)
     new_pop, new_fit = pl.pallas_call(
         kernel,
-        grid=(Pp // pop_block,),
+        grid=(Pp // cfg.pop_block,),
         in_specs=[
-            pl.BlockSpec((pop_block, Dp), row),
-            pl.BlockSpec((pop_block, 1), row),
-            pl.BlockSpec((pop_block, Dp), row),
-            pl.BlockSpec((pop_block, Dp), row),
-            pl.BlockSpec((pop_block, Dp), row),
-            pl.BlockSpec((pop_block, Dp), row),
-            pl.BlockSpec((pop_block, 1), row),
+            pl.BlockSpec((cfg.pop_block, Dp), row),
+            pl.BlockSpec((cfg.pop_block, 1), row),
+            pl.BlockSpec((cfg.pop_block, Dp), row),
+            pl.BlockSpec((cfg.pop_block, Dp), row),
+            pl.BlockSpec((cfg.pop_block, Dp), row),
+            pl.BlockSpec((cfg.pop_block, Dp), row),
+            pl.BlockSpec((cfg.pop_block, 1), row),
             pl.BlockSpec((1, Dp), lambda i: (0, 0)),
         ],
-        out_specs=[pl.BlockSpec((pop_block, Dp), row),
-                   pl.BlockSpec((pop_block, 1), row)],
-        out_shape=[jax.ShapeDtypeStruct((Pp, Dp), pop.dtype),
+        out_specs=[pl.BlockSpec((cfg.pop_block, Dp), row),
+                   pl.BlockSpec((cfg.pop_block, 1), row)],
+        out_shape=[jax.ShapeDtypeStruct((Pp, Dp), dt),
                    jax.ShapeDtypeStruct((Pp, 1), jnp.float32)],
-        interpret=interpret,
+        interpret=cfg.interpret,
     )(padPD(pop), jnp.pad(fit, (0, Pp - P))[:, None], padPD(pa), padPD(pb),
       padPD(pc), padPD(u), jnp.pad(jrand, (0, Pp - P))[:, None], s[None, :])
-    return new_pop[:P, :D], new_fit[:P, 0]
+    return new_pop[:P, :D].astype(pop.dtype), new_fit[:P, 0]

@@ -1,0 +1,96 @@
+"""Fused evaluate-and-select — the generic Pallas survivor kernel.
+
+Every population meta-heuristic in the repo ends its generation the same way:
+evaluate a candidate tile, compare against the incumbent, keep the winner.
+This kernel fuses that tail — shifted objective evaluation (the shared
+``bench_eval._eval_tile`` bodies) + thresholded acceptance — into one VMEM
+pass, parameterized so a single entry covers both acceptance rules in use:
+
+  greedy (DE/GA semantics)   accept iff  f(y) - f(x) <= 0      (thresh = 0)
+  Metropolis (SA)            accept iff  u < exp(-dF / T)
+                             ⟺  dF <= 0  or  dF < -T·ln(u)     (thresh row)
+
+so the caller turns its Metropolis draw into a per-row threshold and the
+kernel stays branch-free. Because acceptance is the *whole* state update for
+SA chains and the portfolio's unified-policy branches dispatch through
+``step_override`` (one traced call per branch), routing a branch through this
+entry removes the per-op XLA dispatch the heterogeneous islands of PR 5 paid
+inside ``lax.switch``.
+
+Tile shapes resolve via ``kernels.autotune``; pad rows from the pop_block
+round-up never accept and surface +inf fitness.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import autotune
+from repro.kernels.autotune import KernelConfig
+from repro.kernels.bench_eval import EVAL_TAGS, _eval_tile, _row_index
+
+
+def _kernel(pop_ref, fit_ref, trial_ref, th_ref, shift_ref,
+            npop_ref, nfit_ref, acc_ref, *, fn: str, dim: int, bias: float,
+            n_rows: int):
+    pop = pop_ref[...].astype(jnp.float32)
+    fit = fit_ref[...].astype(jnp.float32)             # (P, 1)
+    trial = trial_ref[...].astype(jnp.float32)
+    th = th_ref[...].astype(jnp.float32)               # (P, 1)
+    shift = shift_ref[...].astype(jnp.float32)         # (1, Dp)
+
+    tfit = _eval_tile(trial - shift, fn, dim, bias)
+    dF = tfit - fit[:, 0]
+    row_ok = _row_index(pop.shape[0]) < n_rows
+    acc = ((dF <= 0.0) | (dF < th[:, 0])) & row_ok
+    nfit = jnp.where(acc, tfit, fit[:, 0])
+    npop_ref[...] = jnp.where(acc[:, None], trial, pop).astype(npop_ref.dtype)
+    nfit_ref[...] = jnp.where(row_ok, nfit, jnp.inf)[:, None].astype(
+        nfit_ref.dtype)
+    acc_ref[...] = acc[:, None].astype(acc_ref.dtype)
+
+
+def eval_select(pop: jax.Array, fit: jax.Array, trial: jax.Array,
+                thresh: jax.Array | None = None, fn: str = "sphere",
+                shift: jax.Array | None = None, bias: float = 0.0,
+                pop_block: int | None = None, *,
+                interpret: bool | None = None,
+                kernel_cfg: KernelConfig | None = None):
+    """Fused evaluate + accept over candidate rows.
+
+    pop, trial: (P, D) incumbents and candidates; fit: (P,) incumbent
+    fitness; thresh: (P,) per-row acceptance slack (``None``/0 = greedy,
+    ``-T*ln(u)`` = Metropolis at temperature T). Returns
+    (new_pop, new_fit, accepted).
+    """
+    assert fn in EVAL_TAGS, fn
+    P, D = pop.shape
+    cfg = autotune.resolve(
+        autotune.merge(kernel_cfg, pop_block=pop_block, interpret=interpret),
+        "eval_select", P, D, tag=fn)
+    dt = jnp.dtype(cfg.dtype)
+    Dp = max(cfg.dim_pad, (D + 127) // 128 * 128)
+    Pp = (P + cfg.pop_block - 1) // cfg.pop_block * cfg.pop_block
+    padPD = lambda a: jnp.pad(a, ((0, Pp - P), (0, Dp - D))).astype(dt)
+    padP = lambda a: jnp.pad(a, (0, Pp - P))[:, None]
+    th = jnp.zeros((P,), jnp.float32) if thresh is None else thresh
+    s = (jnp.zeros((1, Dp), dt) if shift is None
+         else jnp.pad(shift, (0, Dp - D)).astype(dt)[None, :])
+    kernel = functools.partial(_kernel, fn=fn, dim=D, bias=bias, n_rows=P)
+    row = lambda i: (i, 0)
+    vec = pl.BlockSpec((cfg.pop_block, Dp), row)
+    col = pl.BlockSpec((cfg.pop_block, 1), row)
+    npop, nfit, acc = pl.pallas_call(
+        kernel,
+        grid=(Pp // cfg.pop_block,),
+        in_specs=[vec, col, vec, col, pl.BlockSpec((1, Dp), lambda i: (0, 0))],
+        out_specs=[vec, col, col],
+        out_shape=[jax.ShapeDtypeStruct((Pp, Dp), dt),
+                   jax.ShapeDtypeStruct((Pp, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((Pp, 1), jnp.float32)],
+        interpret=cfg.interpret,
+    )(padPD(pop), padP(fit), padPD(trial), padP(th), s)
+    return (npop[:P, :D].astype(pop.dtype), nfit[:P, 0], acc[:P, 0] > 0.5)

@@ -1,0 +1,110 @@
+"""Fused Genetic-Algorithm offspring generation — Pallas TPU kernel.
+
+One grid step carries a (pop_block, dim) offspring tile through the DGA inner
+loop in VMEM: 1-pt crossover of the pre-gathered parents, per-allele Gaussian
+mutation, box clipping, shifted objective evaluation (the shared
+``bench_eval._eval_tile`` bodies) and the improve-the-slot placement test —
+writing back the new slot contents (child where it beats the slot, the old
+occupant otherwise) plus the take mask.
+
+Cross-population work stays in XLA where it belongs: aging, roulette-wheel
+parent sampling (``jax.random.categorical``), the argsort that picks the
+worst slots, and the final scatter are all O(P)-scalar or gather/scatter ops
+that cannot tile row-locally — mirroring ``de_step``'s pre-gathered-donor
+design. The caller hands the kernel parent rows p1/p2, the slot occupants and
+their fitness, and the per-row crossover/mutation draws (same key discipline
+as ``core.ga.gen``, so fused and unfused paths are bit-comparable).
+
+Tile shapes resolve via ``kernels.autotune``; pad rows from the pop_block
+round-up never place (take=0) and surface +inf slot fitness.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import autotune
+from repro.kernels.autotune import KernelConfig
+from repro.kernels.bench_eval import EVAL_TAGS, _eval_tile, _row_index
+
+
+def _kernel(p1_ref, p2_ref, sp_ref, sf_ref, cut_ref, co_ref, um_ref, nz_ref,
+            shift_ref, ns_ref, nf_ref, tk_ref, *, fn: str, dim: int,
+            bias: float, pc: float, pm: float, sigma_m: float, lo: float,
+            hi: float, n_rows: int):
+    p1 = p1_ref[...].astype(jnp.float32)
+    p2 = p2_ref[...].astype(jnp.float32)
+    slot = sp_ref[...].astype(jnp.float32)
+    slot_f = sf_ref[...].astype(jnp.float32)           # (P, 1)
+    cut = cut_ref[...]                                 # (P, 1) int32
+    co = co_ref[...].astype(jnp.float32)               # (P, 1) uniforms
+    um = um_ref[...].astype(jnp.float32)
+    nz = nz_ref[...].astype(jnp.float32)               # raw N(0,1) draws
+    shift = shift_ref[...].astype(jnp.float32)         # (1, Dp)
+
+    lane = jax.lax.broadcasted_iota(jnp.int32, p1.shape, 1)
+    valid = lane < dim
+    do_co = co < pc
+    child = jnp.where(do_co & (lane < cut) | ~do_co, p1, p2)
+    child = child + jnp.where(um < pm, sigma_m * nz, 0.0)
+    child = jnp.where(valid, jnp.clip(child, lo, hi), 0.0)
+
+    cfit = _eval_tile(child - shift, fn, dim, bias)
+    row_ok = _row_index(p1.shape[0]) < n_rows
+    take = (cfit < slot_f[:, 0]) & row_ok
+    nf = jnp.where(take, cfit, slot_f[:, 0])
+    ns_ref[...] = jnp.where(take[:, None], child, slot).astype(ns_ref.dtype)
+    nf_ref[...] = jnp.where(row_ok, nf, jnp.inf)[:, None].astype(nf_ref.dtype)
+    tk_ref[...] = take[:, None].astype(tk_ref.dtype)
+
+
+def ga_step(p1: jax.Array, p2: jax.Array, slot_pop: jax.Array,
+            slot_f: jax.Array, cut: jax.Array, co: jax.Array, um: jax.Array,
+            noise: jax.Array, fn: str = "sphere",
+            shift: jax.Array | None = None, bias: float = 0.0,
+            pc: float = 0.7, pm: float = 0.1, sigma_m: float = 1.0,
+            lo: float = -100.0, hi: float = 100.0,
+            pop_block: int | None = None, *, interpret: bool | None = None,
+            kernel_cfg: KernelConfig | None = None):
+    """One fused GA offspring wave over ``n_off`` rows.
+
+    p1, p2: (N, D) pre-gathered parents; slot_pop/slot_f: the worst-slot
+    occupants the offspring compete for; cut: (N,) 1-pt crossover positions;
+    co: (N,) crossover-probability uniforms; um, noise: (N, D) mutation
+    uniforms / N(0,1) draws. Returns (new_slot, new_slot_f, take) — the
+    caller scatters them back at its slot indices and updates age/liveness
+    from ``take``.
+    """
+    assert fn in EVAL_TAGS, fn
+    P, D = p1.shape
+    cfg = autotune.resolve(
+        autotune.merge(kernel_cfg, pop_block=pop_block, interpret=interpret),
+        "ga_step", P, D, tag=fn)
+    dt = jnp.dtype(cfg.dtype)
+    Dp = max(cfg.dim_pad, (D + 127) // 128 * 128)
+    Pp = (P + cfg.pop_block - 1) // cfg.pop_block * cfg.pop_block
+    padPD = lambda a: jnp.pad(a, ((0, Pp - P), (0, Dp - D))).astype(dt)
+    padP = lambda a: jnp.pad(a, (0, Pp - P))[:, None]
+    s = (jnp.zeros((1, Dp), dt) if shift is None
+         else jnp.pad(shift, (0, Dp - D)).astype(dt)[None, :])
+    kernel = functools.partial(_kernel, fn=fn, dim=D, bias=bias, pc=pc, pm=pm,
+                               sigma_m=sigma_m, lo=lo, hi=hi, n_rows=P)
+    row = lambda i: (i, 0)
+    vec = pl.BlockSpec((cfg.pop_block, Dp), row)
+    col = pl.BlockSpec((cfg.pop_block, 1), row)
+    ns, nf, tk = pl.pallas_call(
+        kernel,
+        grid=(Pp // cfg.pop_block,),
+        in_specs=[vec, vec, vec, col, col, col, vec, vec,
+                  pl.BlockSpec((1, Dp), lambda i: (0, 0))],
+        out_specs=[vec, col, col],
+        out_shape=[jax.ShapeDtypeStruct((Pp, Dp), dt),
+                   jax.ShapeDtypeStruct((Pp, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((Pp, 1), jnp.float32)],
+        interpret=cfg.interpret,
+    )(padPD(p1), padPD(p2), padPD(slot_pop), padP(slot_f),
+      padP(cut).astype(jnp.int32), padP(co), padPD(um), padPD(noise), s)
+    return (ns[:P, :D].astype(p1.dtype), nf[:P, 0], tk[:P, 0] > 0.5)

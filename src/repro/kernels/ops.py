@@ -12,7 +12,10 @@ import jax
 
 from repro.kernels import bench_eval as _be
 from repro.kernels import de_step as _de
+from repro.kernels import eval_select as _es
 from repro.kernels import flash_attention as _fa
+from repro.kernels import ga_step as _ga
+from repro.kernels import pso_step as _ps
 from repro.kernels import ssd_scan as _ssd
 from repro.kernels import ref
 
@@ -57,3 +60,38 @@ def de_step(pop, fit, idx_abc, u, jrand, fn="sphere", shift=None, bias=0.0,
     return _de.de_step(pop, fit, idx_abc, u, jrand, fn=fn, shift=shift,
                        bias=bias, w=w, px=px, lo=lo, hi=hi,
                        interpret=not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("fn", "bias", "w", "fp", "fg", "vmax",
+                                   "lo", "hi", "use_pallas"))
+def pso_step(x, v, pbest, pbest_f, r1, r2, gbest, fn="sphere", shift=None,
+             bias=0.0, w=0.6, fp=1.0, fg=1.0, vmax=float("inf"), lo=-100.0,
+             hi=100.0, use_pallas=True):
+    if not use_pallas:
+        return ref.pso_step_ref(x, v, pbest, pbest_f, r1, r2, gbest, fn,
+                                shift, bias, w, fp, fg, vmax, lo, hi)
+    return _ps.pso_step(x, v, pbest, pbest_f, r1, r2, gbest, fn=fn,
+                        shift=shift, bias=bias, w=w, fp=fp, fg=fg, vmax=vmax,
+                        lo=lo, hi=hi, interpret=not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("fn", "bias", "pc", "pm", "sigma_m", "lo",
+                                   "hi", "use_pallas"))
+def ga_step(p1, p2, slot_pop, slot_f, cut, co, um, noise, fn="sphere",
+            shift=None, bias=0.0, pc=0.7, pm=0.1, sigma_m=1.0, lo=-100.0,
+            hi=100.0, use_pallas=True):
+    if not use_pallas:
+        return ref.ga_step_ref(p1, p2, slot_pop, slot_f, cut, co, um, noise,
+                               fn, shift, bias, pc, pm, sigma_m, lo, hi)
+    return _ga.ga_step(p1, p2, slot_pop, slot_f, cut, co, um, noise, fn=fn,
+                       shift=shift, bias=bias, pc=pc, pm=pm, sigma_m=sigma_m,
+                       lo=lo, hi=hi, interpret=not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("fn", "bias", "use_pallas"))
+def eval_select(pop, fit, trial, thresh=None, fn="sphere", shift=None,
+                bias=0.0, use_pallas=True):
+    if not use_pallas:
+        return ref.eval_select_ref(pop, fit, trial, thresh, fn, shift, bias)
+    return _es.eval_select(pop, fit, trial, thresh, fn=fn, shift=shift,
+                           bias=bias, interpret=not _on_tpu())

@@ -1,0 +1,113 @@
+"""Fused Particle-Swarm generation — Pallas TPU kernel.
+
+One grid step carries a (pop_block, dim) particle tile through the paper's
+whole DPSO inner loop in VMEM: velocity update (inertia w + cognitive fp +
+social fg), velocity clamp, position clip, shifted objective evaluation (the
+shared ``bench_eval._eval_tile`` bodies) and the per-particle personal-best
+selection — writing back positions, velocities, fitness and the updated
+pbest/pbest_f in one pass. The unfused XLA path materializes r1/r2 products,
+velocity, position and fitness as separate HBM arrays; here the population
+makes one HBM round-trip per generation.
+
+The island-level gbest reduction (argmin over pbest_f) stays in XLA: it is a
+cross-tile reduction over O(P) scalars, negligible next to the O(P*D)
+evaluation the kernel fuses. Random draws r1/r2 are made by the caller with
+the same key discipline as ``core.pso.gen``, so fused and unfused paths are
+bit-comparable on a fixed seed.
+
+Tile shapes resolve via ``kernels.autotune``; pad rows from the pop_block
+round-up are masked out of pbest selection and surface +inf fitness.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import autotune
+from repro.kernels.autotune import KernelConfig
+from repro.kernels.bench_eval import EVAL_TAGS, _eval_tile, _row_index
+
+
+def _kernel(x_ref, v_ref, pb_ref, pbf_ref, r1_ref, r2_ref, g_ref, shift_ref,
+            nx_ref, nv_ref, nf_ref, npb_ref, npbf_ref, *, fn: str, dim: int,
+            bias: float, w: float, fp: float, fg: float, vmax: float,
+            lo: float, hi: float, n_rows: int):
+    x = x_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    pb = pb_ref[...].astype(jnp.float32)
+    pbf = pbf_ref[...].astype(jnp.float32)             # (P, 1)
+    r1 = r1_ref[...].astype(jnp.float32)
+    r2 = r2_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)                 # (1, Dp) gbest
+    shift = shift_ref[...].astype(jnp.float32)         # (1, Dp)
+
+    lane = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    valid = lane < dim
+    nv = w * v + fp * r1 * (pb - x) + fg * r2 * (g - x)
+    nv = jnp.where(valid, jnp.clip(nv, -vmax, vmax), 0.0)
+    nx = jnp.where(valid, jnp.clip(x + nv, lo, hi), 0.0)
+
+    fit = _eval_tile(nx - shift, fn, dim, bias)
+    row_ok = _row_index(x.shape[0]) < n_rows
+    imp = (fit < pbf[:, 0]) & row_ok
+    npb = jnp.where(imp[:, None], nx, pb)
+    npbf = jnp.where(imp, fit, pbf[:, 0])
+
+    nx_ref[...] = nx.astype(nx_ref.dtype)
+    nv_ref[...] = nv.astype(nv_ref.dtype)
+    nf_ref[...] = jnp.where(row_ok, fit, jnp.inf)[:, None].astype(nf_ref.dtype)
+    npb_ref[...] = npb.astype(npb_ref.dtype)
+    npbf_ref[...] = jnp.where(row_ok, npbf, jnp.inf)[:, None].astype(
+        npbf_ref.dtype)
+
+
+def pso_step(x: jax.Array, v: jax.Array, pbest: jax.Array, pbest_f: jax.Array,
+             r1: jax.Array, r2: jax.Array, gbest: jax.Array,
+             fn: str = "sphere", shift: jax.Array | None = None,
+             bias: float = 0.0, w: float = 0.6, fp: float = 1.0,
+             fg: float = 1.0, vmax: float = float("inf"), lo: float = -100.0,
+             hi: float = 100.0, pop_block: int | None = None, *,
+             interpret: bool | None = None,
+             kernel_cfg: KernelConfig | None = None):
+    """One fused PSO generation.
+
+    x, v, pbest, r1, r2: (P, D) f32; pbest_f: (P,); gbest: (D,) — the
+    island's incumbent position. Returns (new_x, new_v, fit, new_pbest,
+    new_pbest_f); the gbest/best_val argmin update stays with the caller.
+    """
+    assert fn in EVAL_TAGS, fn
+    P, D = x.shape
+    cfg = autotune.resolve(
+        autotune.merge(kernel_cfg, pop_block=pop_block, interpret=interpret),
+        "pso_step", P, D, tag=fn)
+    dt = jnp.dtype(cfg.dtype)
+    Dp = max(cfg.dim_pad, (D + 127) // 128 * 128)
+    Pp = (P + cfg.pop_block - 1) // cfg.pop_block * cfg.pop_block
+    padPD = lambda a: jnp.pad(a, ((0, Pp - P), (0, Dp - D))).astype(dt)
+    padD = lambda a: jnp.pad(a, (0, Dp - D)).astype(dt)[None, :]
+    s = jnp.zeros((1, Dp), dt) if shift is None else padD(shift)
+    kernel = functools.partial(_kernel, fn=fn, dim=D, bias=bias, w=w, fp=fp,
+                               fg=fg, vmax=vmax, lo=lo, hi=hi, n_rows=P)
+    row = lambda i: (i, 0)
+    vec = pl.BlockSpec((cfg.pop_block, Dp), row)
+    col = pl.BlockSpec((cfg.pop_block, 1), row)
+    bcast = pl.BlockSpec((1, Dp), lambda i: (0, 0))
+    nx, nv, nf, npb, npbf = pl.pallas_call(
+        kernel,
+        grid=(Pp // cfg.pop_block,),
+        in_specs=[vec, vec, vec, col, vec, vec, bcast, bcast],
+        out_specs=[vec, vec, col, vec, col],
+        out_shape=[jax.ShapeDtypeStruct((Pp, Dp), dt),
+                   jax.ShapeDtypeStruct((Pp, Dp), dt),
+                   jax.ShapeDtypeStruct((Pp, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((Pp, Dp), dt),
+                   jax.ShapeDtypeStruct((Pp, 1), jnp.float32)],
+        interpret=cfg.interpret,
+    )(padPD(x), padPD(v), padPD(pbest),
+      jnp.pad(pbest_f, (0, Pp - P))[:, None], padPD(r1), padPD(r2),
+      padD(gbest), s)
+    return (nx[:P, :D].astype(x.dtype), nv[:P, :D].astype(v.dtype),
+            nf[:P, 0], npb[:P, :D].astype(pbest.dtype), npbf[:P, 0])

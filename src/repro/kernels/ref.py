@@ -65,3 +65,40 @@ def de_step_ref(pop, fit, idx_abc, u, jrand, fn="sphere", shift=None,
     better = tfit <= fit
     return (jnp.where(better[:, None], trial, pop),
             jnp.where(better, tfit, fit))
+
+
+def pso_step_ref(x, v, pbest, pbest_f, r1, r2, gbest, fn="sphere", shift=None,
+                 bias=0.0, w=0.6, fp=1.0, fg=1.0, vmax=float("inf"),
+                 lo=-100.0, hi=100.0):
+    nv = w * v + fp * r1 * (pbest - x) + fg * r2 * (gbest[None, :] - x)
+    nv = jnp.clip(nv, -vmax, vmax)
+    nx = jnp.clip(x + nv, lo, hi)
+    fit = bench_eval_ref(nx, fn, shift, bias)
+    imp = fit < pbest_f
+    return (nx, nv, fit, jnp.where(imp[:, None], nx, pbest),
+            jnp.where(imp, fit, pbest_f))
+
+
+def ga_step_ref(p1, p2, slot_pop, slot_f, cut, co, um, noise, fn="sphere",
+                shift=None, bias=0.0, pc=0.7, pm=0.1, sigma_m=1.0,
+                lo=-100.0, hi=100.0):
+    N, D = p1.shape
+    do_co = (co < pc)[:, None]
+    mask = jnp.arange(D)[None, :] < cut[:, None]
+    child = jnp.where(do_co & mask | ~do_co, p1, p2)
+    child = child + jnp.where(um < pm, sigma_m * noise, 0.0)
+    child = jnp.clip(child, lo, hi)
+    cfit = bench_eval_ref(child, fn, shift, bias)
+    take = cfit < slot_f
+    return (jnp.where(take[:, None], child, slot_pop),
+            jnp.where(take, cfit, slot_f), take)
+
+
+def eval_select_ref(pop, fit, trial, thresh=None, fn="sphere", shift=None,
+                    bias=0.0):
+    tfit = bench_eval_ref(trial, fn, shift, bias)
+    dF = tfit - fit
+    th = jnp.zeros_like(fit) if thresh is None else thresh
+    acc = (dF <= 0.0) | (dF < th)
+    return (jnp.where(acc[:, None], trial, pop),
+            jnp.where(acc, tfit, fit), acc)

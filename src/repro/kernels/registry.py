@@ -18,8 +18,10 @@ class KernelSpec:
     ``eval_tag`` is the branch selector inside ``bench_eval._eval_tile``; it is
     usually the function name itself but kept separate so several registered
     names can share one kernel body (e.g. shifted variants).  ``fused_de``
-    marks the objective as usable inside the fused DE generation kernel (all
-    current tags are — the DE kernel reuses ``_eval_tile`` directly).
+    marks the objective as usable inside the fused whole-generation kernels
+    (``de_step``/``pso_step``/``ga_step``/``eval_select`` — the name predates
+    the non-DE kernels; they all reuse ``_eval_tile``, so one flag gates the
+    lot and every current tag qualifies).
     """
 
     name: str

@@ -53,6 +53,25 @@ def sharded_bytes(shapes: PyTree, specs: PyTree, sizes: dict[str, int],
     return total
 
 
+def pallas_tile_bytes(n_vec: int, pop_block: int, dim_pad: int, *,
+                      n_row: int = 0, n_bcast: int = 0, itemsize: int = 4,
+                      double_buffered: bool = True) -> int:
+    """VMEM working set of one Pallas grid step of a fused optimizer kernel.
+
+    ``n_vec`` counts the ``(pop_block, dim_pad)`` population tiles live in
+    VMEM (inputs + outputs), ``n_row`` the ``(pop_block,)`` per-row operands
+    (fitness, jrand, thresholds), ``n_bcast`` the ``(dim_pad,)`` broadcast
+    rows (shift vector, global best). With ``double_buffered=True`` the
+    row-blocked operands are counted twice — Mosaic prefetches grid step
+    ``i+1`` while ``i`` computes — which is the feasibility bound the kernel
+    autotuner checks against the VMEM budget.
+    """
+    vec = n_vec * pop_block * dim_pad + n_row * pop_block
+    fixed = n_bcast * dim_pad
+    mult = 2 if double_buffered else 1
+    return (mult * vec + fixed) * itemsize
+
+
 def analytic_memory(cfg: ModelConfig, kind: str, mesh_axes: tuple[str, ...],
                     B: int, S: int, params_shape: PyTree, p_specs: PyTree,
                     c_specs: PyTree | None, state_shape: PyTree = None,

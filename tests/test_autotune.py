@@ -1,0 +1,160 @@
+"""Roofline-driven kernel autotuner (ISSUE 6): model sanity, VMEM
+feasibility, per-shape-class cache determinism, and GC-stable function keys."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.functions import get, make_shifted_rosenbrock
+from repro.kernels import autotune as at
+from repro.kernels.autotune import KernelConfig
+from repro.parallel import roofline as rl
+from repro.parallel.memmodel import pallas_tile_bytes
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    at.clear_cache()
+    yield
+    at.clear_cache()
+
+
+# --- the model ---------------------------------------------------------------
+
+def test_predict_roofline_terms_consistent():
+    p = at.predict("de_step", 128, 1000, pop_block=64, dim_pad=1024,
+                   tag="rastrigin")
+    r = p.roofline
+    assert isinstance(r, rl.Roofline)
+    assert r.flops > 0 and r.hbm_bytes > 0
+    assert r.t_compute == pytest.approx(r.flops / at.PEAK_FLOPS_BF16)
+    assert r.t_memory == pytest.approx(r.hbm_bytes / at.HBM_BW)
+    assert r.bottleneck in ("compute", "memory")
+    assert p.t_total >= max(r.t_compute, r.t_memory)
+    assert p.n_grid == 2 and p.tile_bytes == r.peak_bytes
+
+
+def test_predict_interpret_penalizes_grid_steps():
+    """Interpret mode pays per grid step, so a finer tiling of the same
+    problem must cost strictly more than one big tile."""
+    fine = at.predict("bench_eval", 1024, 128, 8, 128, interpret=True)
+    coarse = at.predict("bench_eval", 1024, 128, 1024, 128, interpret=True)
+    assert fine.n_grid == 128 and coarse.n_grid == 1
+    assert fine.t_total > coarse.t_total
+
+
+def test_candidates_bounded_and_aligned():
+    for b, d in at.candidates(37, 100):
+        assert b % 8 == 0 and b <= 40
+        assert d % 128 == 0 and d >= 100
+    assert (40, 128) in at.candidates(37, 100)
+
+
+def test_pallas_tile_bytes_model():
+    # 3 vec tiles of 8x128 f32, double-buffered, + 2 row vecs + 1 bcast row
+    got = pallas_tile_bytes(3, 8, 128, n_row=2, n_bcast=1, itemsize=4)
+    assert got == (2 * (3 * 8 * 128 + 2 * 8) + 128) * 4
+    assert pallas_tile_bytes(1, 8, 128, double_buffered=False) == 8 * 128 * 4
+
+
+def test_vmem_infeasible_configs_rejected():
+    """A tile that cannot fit VMEM must never be chosen when any feasible
+    candidate exists."""
+    cfg = at.choose("pso_step", 4096, 8192, "sphere", interpret=False)
+    pred = at.predict("pso_step", 4096, 8192, cfg.pop_block, cfg.dim_pad)
+    assert pred.feasible
+
+
+# --- the cache ---------------------------------------------------------------
+
+def test_choose_deterministic_and_cached():
+    c1 = at.choose("de_step", 128, 1000, "rastrigin")
+    s1 = at.cache_stats()
+    c2 = at.choose("de_step", 128, 1000, "rastrigin")
+    s2 = at.cache_stats()
+    assert c1 == c2 and isinstance(c1, KernelConfig)
+    assert c1.pop_block is not None and c1.dim_pad is not None
+    assert s1["misses"] == 1 and s2 == {**s1, "hits": s1["hits"] + 1}
+    # distinct shape-class -> a fresh tune, not a stale hit
+    c3 = at.choose("de_step", 256, 1000, "rastrigin")
+    assert at.cache_stats()["misses"] == 2
+    assert isinstance(c3, KernelConfig)
+
+
+def test_choose_unknown_kind_raises():
+    with pytest.raises(KeyError, match="unknown kernel kind"):
+        at.choose("warp_drive", 8, 8)
+
+
+def test_choose_for_keys_on_cache_token():
+    """Same objective twice -> one tune then hits; an equal-content clone has
+    a different cache_token and must re-key rather than alias."""
+    f = make_shifted_rosenbrock(16, seed=3)
+    c1 = at.choose_for(f, "de_step", 64, 16)
+    assert at.cache_stats()["misses"] == 1
+    c2 = at.choose_for(f, "de_step", 64, 16)
+    assert c1 == c2 and at.cache_stats()["hits"] == 1
+    clone = dataclasses.replace(f, shift=f.shift + 1.0)
+    n_keys = len(at._FN_CACHE)
+    at.choose_for(clone, "de_step", 64, 16)
+    # the clone re-keys the per-objective memo (its shape-class config may
+    # still be served from the shared kind/P/D cache — that's fine)
+    assert len(at._FN_CACHE) == n_keys + 1
+
+
+def test_choose_for_unregistered_function_raises():
+    with pytest.raises(KeyError, match="weierstrass"):
+        at.choose_for(get("weierstrass"), "de_step", 8, 8)
+
+
+def test_resolve_explicit_fields_win():
+    full = at.resolve(KernelConfig(pop_block=16, dim_pad=256, interpret=True),
+                      "bench_eval", 37, 100)
+    assert full == KernelConfig(pop_block=16, dim_pad=256, interpret=True)
+    part = at.resolve(KernelConfig(pop_block=16), "bench_eval", 37, 100,
+                      interpret=True)
+    assert part.pop_block == 16 and part.dim_pad is not None
+    assert part.interpret is True
+
+
+def test_merge_overlay_precedence():
+    base = KernelConfig(pop_block=8, dim_pad=128)
+    m = at.merge(base, pop_block=32)
+    assert m.pop_block == 32 and m.dim_pad == 128
+    assert at.merge(None, interpret=True) == KernelConfig(interpret=True)
+
+
+def test_measured_sweep_runs_real_kernel():
+    cfg = at.choose("bench_eval", 16, 32, "sphere", interpret=True,
+                    measure=True)
+    assert at.cache_stats()["measured"] == 1
+    assert cfg.pop_block is not None and cfg.pop_block <= 16
+
+
+def test_kernel_entries_consume_threaded_config():
+    """A fully-pinned KernelConfig threads through a kernel entry unchanged
+    (the ExecutorConfig.kernel path) and still matches the default config's
+    numbers."""
+    from repro.kernels.bench_eval import bench_eval
+    pop = jax.random.uniform(jax.random.PRNGKey(0), (37, 64),
+                             minval=-5.0, maxval=5.0)
+    pinned = bench_eval(pop, "rastrigin",
+                        kernel_cfg=KernelConfig(pop_block=8, dim_pad=128,
+                                                interpret=True))
+    auto = bench_eval(pop, "rastrigin")
+    assert jnp.max(jnp.abs(pinned - auto) / (jnp.abs(auto) + 1.0)) < 1e-6
+
+
+# --- roofline smoke (the analyzer the tuner shares constants with) -----------
+
+def test_roofline_analyze_smoke():
+    x = jnp.ones((256, 256), jnp.float32)
+    compiled = jax.jit(lambda a: a @ a).lower(x).compile()
+    r = rl.analyze(compiled)
+    assert isinstance(r, rl.Roofline)
+    assert r.flops >= 2 * 256**3 * 0.5          # matmul flops dominate
+    assert r.t_compute > 0 and r.t_memory > 0
+    assert r.bottleneck in ("compute", "memory", "collective")
+    d = r.to_dict()
+    assert set(d) >= {"flops", "hbm_bytes", "bottleneck"}

@@ -221,3 +221,75 @@ def test_single_optimizer_run_cache_hits_across_calls():
     r2 = opt.minimize(f, KEY)
     assert len(opt._many_cache) == n_cached  # second call reused the program
     assert r1.value == r2.value
+
+
+# --- fused PSO/GA/SA + eval_select (ISSUE 6) ---------------------------------
+
+from repro.core import ga, pso, sa  # noqa: E402
+
+
+@pytest.mark.parametrize("mod,keys", [
+    (pso, ("pop", "fit", "vel", "pbest", "pbest_f", "best_val")),
+    (ga, ("pop", "fit", "age", "alive", "best_val")),
+    (sa, ("pop", "fit", "t", "best_val")),
+])
+def test_fused_one_generation_matches_xla(mod, keys):
+    """Same key, same state -> the fused whole-generation kernel reproduces
+    the plain XLA gen bit-for-bit up to f32 summation noise (mirrors the
+    fused-DE regression above)."""
+    f = get("rastrigin")
+    pop, dim = 24, 16
+    ev = make_batch_evaluator(f, ExecutorConfig())
+    plain = mod.make(f=f, evaluator=ev, pop=pop, dim=dim)
+    fused = mod.make(f=f, evaluator=ev, pop=pop, dim=dim, fused=True)
+    assert fused.step_override is not None and plain.step_override is None
+    state = plain.init(jax.random.fold_in(KEY, 3))
+    gk = jax.random.fold_in(KEY, 4)
+    s_plain = plain.gen(dict(state), gk)
+    s_fused = fused.step_override(dict(state), gk)
+    assert set(s_plain) == set(s_fused) >= set(keys)
+    for k in keys:
+        np.testing.assert_allclose(
+            np.asarray(s_plain[k], np.float32), np.asarray(s_fused[k], np.float32),
+            rtol=1e-4, atol=1e-4, err_msg=f"{mod.__name__}:{k}")
+
+
+@pytest.mark.parametrize("algo", ["pso", "ga", "sa"])
+def test_fused_policy_runs_under_island_engine(algo):
+    f = get("rastrigin")
+    cfg = IslandConfig(n_islands=2, pop=24, dim=8, sync_every=5, max_evals=6000)
+    r1 = IslandOptimizer(ALGORITHMS[algo], cfg, params={"fused": True}).minimize(f, KEY)
+    r2 = IslandOptimizer(ALGORITHMS[algo], cfg, params={"fused": True}).minimize(f, KEY)
+    assert r1.value == r2.value          # deterministic
+    assert np.isfinite(r1.value)
+    hist = np.asarray(r1.history)
+    assert np.all(hist[1:] <= hist[:-1] + 1e-9)
+
+
+def test_fused_portfolio_under_lax_switch():
+    """Heterogeneous portfolio where every branch is a fused kernel: the
+    step_override path must survive lax.switch tracing and stay deterministic."""
+    f = get("rastrigin")
+    cfg = IslandConfig(n_islands=3, pop=16, dim=8, sync_every=5, max_evals=4800,
+                       portfolio=("de", "pso", "sa"))
+    fused_params = {"de": {"fused": True}, "pso": {"fused": True},
+                    "sa": {"fused": True}}
+    r1 = IslandOptimizer(None, cfg, params=fused_params).minimize(f, KEY)
+    r2 = IslandOptimizer(None, cfg, params=fused_params).minimize(f, KEY)
+    assert r1.value == r2.value
+    assert np.isfinite(r1.value) and r1.value < 10.0 * 8 * 2
+
+
+def test_executor_kernel_config_threads_to_pallas_backend():
+    """ExecutorConfig.kernel pins the eval kernel's tiling; a pinned config
+    and the autotuned default must agree numerically."""
+    from repro.kernels import KernelConfig
+    f = get("rastrigin")
+    pop = jax.random.uniform(jax.random.fold_in(KEY, 21), (37, 12),
+                             minval=f.lo, maxval=f.hi)
+    pinned = make_batch_evaluator(
+        f, ExecutorConfig(backend="pallas",
+                          kernel=KernelConfig(pop_block=8, dim_pad=128)))(pop)
+    auto = make_batch_evaluator(f, ExecutorConfig(backend="pallas"))(pop)
+    np.testing.assert_allclose(np.asarray(pinned), np.asarray(auto),
+                               rtol=1e-6, atol=1e-6)

@@ -125,3 +125,97 @@ def test_de_step_monotone():
     jr = jax.random.randint(jax.random.fold_in(KEY, 12), (P,), 0, D)
     _, nf = ops.de_step(pop, fit, idx, u, jr, fn="sphere")
     assert bool(jnp.all(nf <= fit + 1e-6))
+
+
+# --- fused whole-generation kernels (ISSUE 6) --------------------------------
+
+def _box_pop(P, D, fn, k=0):
+    from repro.functions import get
+    f = get(fn)
+    return jax.random.uniform(jax.random.fold_in(KEY, 100 + k), (P, D),
+                              minval=max(f.lo, -5.0), maxval=min(f.hi, 5.0))
+
+
+@pytest.mark.parametrize("fn", ["sphere", "rastrigin", "griewank"])
+@pytest.mark.parametrize("P,D", [(32, 64), (37, 100), (99, 333)])
+def test_pso_step(fn, P, D):
+    x = _box_pop(P, D, fn, 0)
+    v = 0.1 * _rand((P, D), k=1)
+    pbest = _box_pop(P, D, fn, 2)
+    pbest_f = ref.bench_eval_ref(pbest, fn)
+    r1 = jax.random.uniform(jax.random.fold_in(KEY, 103), (P, D))
+    r2 = jax.random.uniform(jax.random.fold_in(KEY, 104), (P, D))
+    gbest = pbest[jnp.argmin(pbest_f)]
+    out = ops.pso_step(x, v, pbest, pbest_f, r1, r2, gbest, fn=fn, vmax=2.0)
+    exp = ref.pso_step_ref(x, v, pbest, pbest_f, r1, r2, gbest, fn=fn, vmax=2.0)
+    for a, b in zip(out, exp):
+        assert a.shape == b.shape
+        assert jnp.max(jnp.abs(a - b) / (jnp.abs(b) + 1.0)) < 1e-4
+
+
+@pytest.mark.parametrize("fn", ["sphere", "rastrigin", "griewank"])
+@pytest.mark.parametrize("N,D", [(16, 64), (37, 100), (99, 333)])
+def test_ga_step(fn, N, D):
+    p1 = _box_pop(N, D, fn, 0)
+    p2 = _box_pop(N, D, fn, 1)
+    slot_pop = _box_pop(N, D, fn, 2)
+    slot_f = ref.bench_eval_ref(slot_pop, fn)
+    cut = jax.random.randint(jax.random.fold_in(KEY, 110), (N,), 1, D)
+    co = jax.random.uniform(jax.random.fold_in(KEY, 111), (N,))
+    um = jax.random.uniform(jax.random.fold_in(KEY, 112), (N, D))
+    nz = jax.random.normal(jax.random.fold_in(KEY, 113), (N, D))
+    out = ops.ga_step(p1, p2, slot_pop, slot_f, cut, co, um, nz, fn=fn)
+    exp = ref.ga_step_ref(p1, p2, slot_pop, slot_f, cut, co, um, nz, fn=fn)
+    assert jnp.array_equal(out[2], exp[2])          # identical take decisions
+    for a, b in zip(out[:2], exp[:2]):
+        assert jnp.max(jnp.abs(a - b) / (jnp.abs(b) + 1.0)) < 1e-4
+
+
+@pytest.mark.parametrize("P,D", [(32, 64), (37, 100), (99, 333)])
+@pytest.mark.parametrize("use_thresh", [False, True])
+def test_eval_select(P, D, use_thresh):
+    fn = "rastrigin"
+    pop = _box_pop(P, D, fn, 0)
+    fit = ref.bench_eval_ref(pop, fn)
+    trial = _box_pop(P, D, fn, 1)
+    th = (2.0 * jax.random.uniform(jax.random.fold_in(KEY, 120), (P,))
+          if use_thresh else None)
+    out = ops.eval_select(pop, fit, trial, th, fn=fn)
+    exp = ref.eval_select_ref(pop, fit, trial, th, fn=fn)
+    assert jnp.array_equal(out[2], exp[2])
+    for a, b in zip(out[:2], exp[:2]):
+        assert jnp.max(jnp.abs(a - b) / (jnp.abs(b) + 1.0)) < 1e-4
+
+
+def test_eval_select_greedy_monotone():
+    P, D = 41, 30                               # padded tail: 41 -> block of 48
+    pop = _box_pop(P, D, "sphere", 0)
+    fit = ref.bench_eval_ref(pop, "sphere")
+    trial = _box_pop(P, D, "sphere", 1)
+    _, nf, _ = ops.eval_select(pop, fit, trial, None, fn="sphere")
+    assert bool(jnp.all(nf <= fit + 1e-6))
+
+
+@pytest.mark.parametrize("P", [5, 37, 130])
+def test_padded_tail_rows_never_selected(P):
+    """Explicit small pop_block forces pad rows in the last grid tile; the
+    in-kernel row mask must keep them out of every selection decision."""
+    from repro.kernels.bench_eval import bench_eval as _bench_eval
+    from repro.kernels.de_step import de_step as _de_step
+    D = 33
+    pop = _box_pop(P, D, "rastrigin", 0)
+    fit = ref.bench_eval_ref(pop, "rastrigin")
+    out = _bench_eval(pop, "rastrigin", pop_block=8, interpret=True)
+    assert out.shape == (P,)
+    assert jnp.max(jnp.abs(out - fit) / (jnp.abs(fit) + 1.0)) < 1e-5
+    i = jnp.arange(P)
+    idx = jnp.stack([(i + 1) % P, (i + 2) % P, (i + 3) % P])
+    u = jax.random.uniform(jax.random.fold_in(KEY, 130), (P, D))
+    jr = jax.random.randint(jax.random.fold_in(KEY, 131), (P,), 0, D)
+    np_, nf = _de_step(pop, fit, idx, u, jr, fn="rastrigin",
+                       pop_block=8, interpret=True)
+    ep, ef = ref.de_step_ref(pop, fit, idx, u, jr, fn="rastrigin")
+    assert np_.shape == (P, D) and nf.shape == (P,)
+    assert bool(jnp.all(jnp.isfinite(nf)))
+    assert jnp.max(jnp.abs(np_ - ep)) < 1e-5
+    assert jnp.max(jnp.abs(nf - ef) / (jnp.abs(ef) + 1.0)) < 1e-5

@@ -1,5 +1,5 @@
 """Generate docs/API.md — the public-API reference for ``core/``, ``optim/``
-and ``kernels/registry`` — from the modules themselves (stdlib-only, offline).
+and ``kernels/{registry,autotune}`` — from the modules themselves (stdlib-only, offline).
 
     PYTHONPATH=src python tools/gen_api_docs.py            # (re)write docs/API.md
     PYTHONPATH=src python tools/gen_api_docs.py --check    # CI: fail if stale
@@ -42,6 +42,7 @@ MODULES = (
     "repro.optim.numgrad",
     "repro.optim.adam",
     "repro.kernels.registry",
+    "repro.kernels.autotune",
 )
 
 OUT = Path(__file__).resolve().parents[1] / "docs" / "API.md"
@@ -49,7 +50,7 @@ OUT = Path(__file__).resolve().parents[1] / "docs" / "API.md"
 HEADER = """\
 # API reference
 
-Public surface of `core/`, `optim/` and `kernels/registry`, generated from
+Public surface of `core/`, `optim/` and `kernels/{registry,autotune}`, generated from
 the source by [`tools/gen_api_docs.py`](../tools/gen_api_docs.py) — do not
 edit by hand. Regenerate with:
 
