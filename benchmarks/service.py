@@ -1,0 +1,177 @@
+"""Service soak: p50/p99 submit-to-result latency for concurrent mixed-shape
+clients, blocking baseline (``workers=0``, the pre-§12 service: one global op
+lock, flushes inline) vs the bounded worker pool — with and without an
+injected slow bucket. Writes ``BENCH_service.json`` (CI uploads the --smoke
+variant).
+
+    PYTHONPATH=src python benchmarks/service.py            # full
+    PYTHONPATH=src python benchmarks/service.py --smoke    # CI-sized
+
+The slow bucket is injected through the scheduler's fault hook: every sync
+round of one designated shape-class sleeps a few milliseconds, standing in
+for a genuinely expensive objective. In the blocking baseline that bucket's
+flush runs inline under the service op lock, so every other client's
+submit/result stalls behind it and tail latency explodes; with the pool the
+slow bucket pins one worker while fast buckets drain through the others.
+The acceptance gate (full mode) is that the pool beats the baseline on p99
+and wall time under slow-bucket injection.
+
+Client threads drive ``OptimizationService.handle`` in-process — the same
+entry point both the stdin and TCP front-ends call — so the measurement is
+service-layer scheduling, not socket plumbing.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.core import OptRequest, ShapeBucketScheduler
+from repro.launch.opt_serve import OptimizationService
+
+FAST_SHAPES = [
+    dict(fn="sphere", algo="de", dim=4, pop=16, n_islands=2, sync_every=5,
+         max_evals=2_000, migration="ring"),
+    dict(fn="rastrigin", algo="pso", dim=6, pop=16, n_islands=2, sync_every=5,
+         max_evals=2_000, migration="ring"),
+    dict(fn="rosenbrock", algo="de", dim=8, pop=32, n_islands=2, sync_every=5,
+         max_evals=4_000, migration="ring"),
+]
+
+
+def _slow_shape(rounds: int) -> dict:
+    # sync_every=1 => one hook call (and one injected sleep) per 32-eval round
+    return dict(fn="rastrigin", algo="de", dim=5, pop=16, n_islands=2,
+                sync_every=1, max_evals=32 + 32 * rounds, migration="ring")
+
+
+def run_scenario(workers: int, slow: bool, n_threads: int, jobs_per_thread: int,
+                 slow_rounds: int, slow_sleep_ms: float) -> dict:
+    """One (mode, injection) cell: returns latency percentiles + wall time."""
+    slow_key = OptRequest.from_dict(_slow_shape(slow_rounds)).shape_class()
+
+    def hook(key, r):
+        if key == slow_key:
+            time.sleep(slow_sleep_ms / 1e3)
+
+    sched = ShapeBucketScheduler(workers=workers,
+                                 fault_hook=hook if slow else None)
+    svc = OptimizationService(scheduler=sched, max_batch=8, flush_ms=10.0)
+
+    # warm the compile caches so the measurement is scheduling, not XLA
+    for i, shape in enumerate(FAST_SHAPES + ([_slow_shape(2)] if slow else [])):
+        r = svc.handle({"op": "submit", "request": dict(shape, seed=900 + i)})
+        svc.handle({"op": "result", "id": r["id"]})
+
+    lat_ms, errors = [], []
+    mu = threading.Lock()
+
+    def client(t: int) -> None:
+        for i in range(jobs_per_thread):
+            req = dict(FAST_SHAPES[(t + i) % len(FAST_SHAPES)],
+                       seed=1000 * t + i)
+            t0 = time.perf_counter()
+            sub = svc.handle({"op": "submit", "request": req})
+            if "error" in sub:
+                with mu:
+                    errors.append(sub)
+                continue
+            out = svc.handle({"op": "result", "id": sub["id"]})
+            dt = (time.perf_counter() - t0) * 1e3
+            with mu:
+                (lat_ms if out.get("status") == "done" else errors).append(dt)
+
+    def slow_client() -> None:
+        sub = svc.handle({"op": "submit",
+                          "request": dict(_slow_shape(slow_rounds), seed=77)})
+        svc.handle({"op": "flush"})
+        svc.handle({"op": "result", "id": sub["id"]})
+
+    threads = [threading.Thread(target=client, args=(t,))
+               for t in range(n_threads)]
+    if slow:
+        threads.insert(0, threading.Thread(target=slow_client))
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    sched.close()
+
+    pct = (lambda q: round(float(np.percentile(lat_ms, q)), 2)) if lat_ms \
+        else (lambda q: None)
+    n = len(lat_ms)
+    return {
+        "mode": "pool" if workers else "blocking",
+        "workers": workers,
+        "slow_bucket": slow,
+        "n_clients": n_threads + (1 if slow else 0),
+        "jobs": n,
+        "errors": len(errors),
+        "p50_ms": pct(50), "p90_ms": pct(90), "p99_ms": pct(99),
+        "mean_ms": round(float(np.mean(lat_ms)), 2) if lat_ms else None,
+        "max_ms": pct(100),
+        "wall_s": round(wall, 3),
+        "jobs_per_s": round(n / wall, 3) if n else 0.0,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized soak (fewer clients, shorter slow bucket)")
+    ap.add_argument("--threads", type=int, default=10,
+                    help="fast-lane client threads per scenario")
+    ap.add_argument("--jobs", type=int, default=10,
+                    help="requests per client thread")
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--slow-rounds", type=int, default=400,
+                    help="sync rounds in the injected slow bucket")
+    ap.add_argument("--slow-sleep-ms", type=float, default=10.0,
+                    help="injected per-round sleep for the slow bucket")
+    ap.add_argument("--out", default="BENCH_service.json")
+    args = ap.parse_args()
+
+    if args.smoke:
+        args.threads, args.jobs, args.slow_rounds = 4, 3, 60
+
+    scenarios = []
+    for workers in (0, args.workers):
+        for slow in (False, True):
+            rec = run_scenario(workers, slow, args.threads, args.jobs,
+                               args.slow_rounds, args.slow_sleep_ms)
+            print(json.dumps(rec), flush=True)
+            scenarios.append(rec)
+
+    by = {(r["mode"], r["slow_bucket"]): r for r in scenarios}
+    blocking, pool = by[("blocking", True)], by[("pool", True)]
+    report = {
+        "backend": jax.default_backend(),
+        "smoke": args.smoke,
+        "requests_total": sum(r["jobs"] for r in scenarios),
+        "scenarios": scenarios,
+        "slow_bucket_p99_speedup": round(blocking["p99_ms"] / pool["p99_ms"], 2),
+        "slow_bucket_wall_speedup": round(blocking["wall_s"] / pool["wall_s"], 2),
+        "pool_beats_blocking_with_slow_bucket":
+            pool["p99_ms"] < blocking["p99_ms"]
+            and pool["wall_s"] < blocking["wall_s"],
+    }
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2)
+        fh.write("\n")
+    print(json.dumps({k: v for k, v in report.items() if k != "scenarios"},
+                     indent=2))
+    if sum(r["errors"] for r in scenarios):
+        raise SystemExit("soak lost responses")
+    if not args.smoke and not report["pool_beats_blocking_with_slow_bucket"]:
+        raise SystemExit("worker pool failed to beat the blocking baseline "
+                         "under slow-bucket injection")
+
+
+if __name__ == "__main__":
+    main()

@@ -43,6 +43,11 @@ def _flatten_with_names(tree: PyTree):
 
 
 class CheckpointStore:
+    """Directory-backed pytree snapshots: atomic commits, async writes, a
+    payload checksum validated on restore, and elastic re-sharding (see the
+    module docstring). Used per training run (``launch/train``) and per
+    dispatched service bucket (``core/scheduler``, DESIGN.md §12)."""
+
     def __init__(self, root: str, keep: int = 3):
         self.root = root
         self.keep = keep
@@ -88,6 +93,8 @@ class CheckpointStore:
             self._thread.start()
 
     def wait(self) -> None:
+        """Block until the async writer thread (``save(blocking=False)``) has
+        committed its checkpoint; no-op when nothing is in flight."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
@@ -101,6 +108,7 @@ class CheckpointStore:
     # -- read ---------------------------------------------------------------
 
     def list_steps(self) -> list[int]:
+        """Steps with a committed (manifest-carrying) checkpoint, ascending."""
         out = []
         for d in os.listdir(self.root):
             if d.startswith("step_"):
@@ -109,8 +117,22 @@ class CheckpointStore:
         return sorted(out)
 
     def latest_step(self) -> int | None:
+        """Most recent committed step, or None when the store is empty."""
         steps = self.list_steps()
         return steps[-1] if steps else None
+
+    def read_manifest(self, step: int | None = None) -> dict:
+        """The committed manifest (step, leaf table, checksum, ``extra``) for
+        ``step`` (default: latest) — metadata only, no leaf IO. Lets a
+        restarting service discover what a checkpoint holds (job specs,
+        round counter) before paying for, and shape-validating, a full
+        :meth:`restore`."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        d = os.path.join(self.root, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            return json.load(f)
 
     def restore(self, like: PyTree, step: int | None = None,
                 shardings: PyTree | None = None) -> tuple[int, PyTree, dict]:

@@ -157,19 +157,40 @@ class OptRequest:
 
 @dataclasses.dataclass
 class OptResponse:
-    """Job envelope the service hands back on poll/result: lifecycle status
-    plus the ``OptimizeResult`` payload once the job's bucket has run."""
+    """Job envelope the service hands back on poll/result: lifecycle status,
+    streamed per-round progress while the job's bucket is running
+    (DESIGN.md §12), plus the ``OptimizeResult`` payload once it finishes.
+
+    A ``cancelled`` job carries a *partial* result — the incumbent at the
+    round boundary where cooperative preemption took effect."""
 
     job_id: str
-    status: str = "queued"          # queued | running | done | error
+    status: str = "queued"          # queued | running | done | error | cancelled
     result: OptimizeResult | None = None
     error: str | None = None
+    # Streaming progress (host-stepped bucket runs update these every sync
+    # round; pollers read them lock-free — each field is one GIL-atomic write)
+    round: int | None = None        # sync rounds completed so far
+    n_rounds: int | None = None     # total rounds this run will execute
+    best_val: float | None = None   # current global incumbent value
+    evals_done: int | None = None   # evaluations consumed so far
+
+    def progress_dict(self) -> dict[str, Any]:
+        """The streamed-progress fields that are set, as a JSON-able dict —
+        what ``poll`` merges into its reply while the bucket is running."""
+        out: dict[str, Any] = {}
+        for k in ("round", "n_rounds", "best_val", "evals_done"):
+            v = getattr(self, k)
+            if v is not None:
+                out[k] = v
+        return out
 
     def to_dict(self) -> dict[str, Any]:
         """JSONL-serializable reply for the service's result/poll ops."""
         out: dict[str, Any] = {"id": self.job_id, "status": self.status}
         if self.error is not None:
             out["error"] = self.error
+        out.update(self.progress_dict())
         if self.result is not None:
             out.update(
                 value=self.result.value,

@@ -547,6 +547,19 @@ class IslandOptimizer:
             n_gens=n_rounds * cfg.sync_every, history=history,
         )
 
+    def bucket_stepper(self, f: Function) -> "BucketStepper":
+        """Cached host-stepped jobs-axis runner for objective ``f`` — the
+        round-granular sibling of :meth:`minimize_many` (see
+        :class:`BucketStepper`). Requires the unsharded engine: the
+        host-stepped loop cannot run inside ``shard_map`` (DESIGN.md §8)."""
+        ck = ("stepper", *f.cache_token())
+        hit = self._many_cache.get(ck)
+        if hit is not None and hit[0] is f.fn:
+            return hit[1]
+        stepper = BucketStepper(self, f)
+        self._many_cache[ck] = (f.fn, stepper)
+        return stepper
+
     # -- jobs axis ---------------------------------------------------------
 
     def _many_fn(self, f: Function) -> tuple[MetaHeuristic, Callable, int]:
@@ -671,6 +684,125 @@ class IslandOptimizer:
             )
             for j in range(n_jobs)
         ]
+
+
+class BucketStepper:
+    """Host-stepped jobs-axis runner — ``minimize_many``'s exact per-round
+    program, advanced one sync round at a time from the host (DESIGN.md §12).
+
+    The service layer's hardening primitive: because control returns to the
+    host at every round boundary, a bucket run can stream per-round incumbent
+    progress to pollers, honor cooperative cancellation, and snapshot its
+    full engine state through ``checkpoint/store.py`` — while staying
+    **bit-identical** to the device-resident ``minimize_many`` scan (same
+    init, same ``_chain_split`` key streams, same round/polish/history order;
+    the contract ``tests/test_service.py`` enforces).
+
+    Requires the unsharded engine (no island mesh, no population mesh): the
+    host-stepped loop cannot run inside ``shard_map``. Portfolio buckets are
+    also refused: XLA compiles the ``lax.switch`` round body slightly
+    differently per-round than inside the resident scan (last-ulp float
+    drift), which would break the bit-identity contract — so the scheduler
+    keeps those buckets on the device-resident path.
+    """
+
+    def __init__(self, opt: IslandOptimizer, f: Function) -> None:
+        if opt._island_mesh is not None or opt.mesh is not None:
+            raise ValueError(
+                "bucket_stepper requires the unsharded engine — the "
+                "host-stepped loop cannot run inside shard_map (DESIGN.md §8)")
+        if opt.cfg.portfolio:
+            raise ValueError(
+                "bucket_stepper does not support portfolio islands: the "
+                "per-round jit of the lax.switch body is not bit-identical "
+                "to the resident scan's compilation of it (DESIGN.md §12)")
+        cfg = opt.cfg
+        self.cfg = cfg
+        algo = opt._build(f)
+        polish_pass, pp = opt._polish(f)
+        per_gen_total, init_total = opt._eval_totals(algo)
+        self.n_rounds, self.per_round, _, self.per_polish = opt._budget(
+            per_gen_total, init_total, pp)
+        self.init_evals = init_total
+        self.every = max(1, cfg.polish_every)
+        self.has_polish = polish_pass is not None
+        stacked = cfg.n_islands > 1
+        round_fn = opt._round_fn(algo)
+        n_rounds = self.n_rounds
+
+        def prep(k: Array) -> tuple[State, Array]:
+            # minimize_many's one_job preamble, verbatim: the same split/init/
+            # _chain_split discipline, so trajectories match bit-for-bit.
+            key, ik = jax.random.split(k)
+            if cfg.portfolio:
+                state = algo.init_stacked(jax.random.split(ik, cfg.n_islands))
+            elif stacked:
+                state = jax.vmap(algo.init)(jax.random.split(ik, cfg.n_islands))
+            else:
+                state = algo.init(ik)
+            return state, _chain_split(key, n_rounds)
+
+        def keys_only(k: Array) -> Array:
+            key, _ = jax.random.split(k)
+            return _chain_split(key, n_rounds)
+
+        def point(state: State) -> Array:
+            bv = state["best_val"]
+            return jnp.min(bv, axis=-1) if stacked else bv
+
+        def step(state: State, rk: Array) -> tuple[State, Array]:
+            state = jax.vmap(round_fn)(state, rk)
+            return state, point(state)
+
+        def step_polish(state: State, rk: Array) -> tuple[State, Array]:
+            # Polish BEFORE the history point is read — the device-resident
+            # scan body's order (round_fn -> cond polish -> point).
+            state = jax.vmap(round_fn)(state, rk)
+            state = jax.vmap(polish_pass)(state)
+            return state, point(state)
+
+        self._prep = jax.jit(jax.vmap(prep))
+        self._keys = jax.jit(jax.vmap(keys_only))
+        self._best = jax.jit(jax.vmap(lambda s: _select_best(s, stacked)))
+        self._step = jax.jit(step, donate_argnums=0)
+        self._step_polish = (jax.jit(step_polish, donate_argnums=0)
+                             if self.has_polish else None)
+
+    def init(self, keys: Array) -> tuple[State, Array]:
+        """``keys (J, 2) -> (job-stacked state, round keys (J, n_rounds, 2))``
+        — one jitted dispatch, identical to ``minimize_many``'s per-job init."""
+        return self._prep(keys)
+
+    def round_keys(self, keys: Array) -> Array:
+        """Re-derive the ``(J, n_rounds, 2)`` round-key table from job keys
+        without re-running init — how a resumed run (which restores its state
+        from a checkpoint) rebuilds the exact key stream it was killed on."""
+        return self._keys(keys)
+
+    def state_shape(self, keys: Array) -> State:
+        """``ShapeDtypeStruct`` pytree of the job-stacked state — the
+        ``like`` template a checkpoint restore validates shapes against."""
+        return jax.eval_shape(lambda k: self._prep(k)[0], keys)
+
+    def step(self, state: State, round_keys: Array, r: int) -> tuple[State, Array]:
+        """Advance round ``r``: ``sync_every`` generations + migration +
+        incumbent merge (+ polish on its cadence), returning the new state and
+        each job's current global best value ``(J,)``. Donates ``state`` —
+        callers must not reuse the argument after the call."""
+        fn = (self._step_polish
+              if self.has_polish and (r + 1) % self.every == 0 else self._step)
+        return fn(state, round_keys[:, r])
+
+    def best(self, state: State) -> tuple[Array, Array]:
+        """Per-job global incumbent ``(args (J, dim), vals (J,))`` from the
+        current state — non-donating, usable mid-run for partial results."""
+        return self._best(state)
+
+    def evals_done(self, rounds: int) -> int:
+        """Per-job evaluations consumed after ``rounds`` completed rounds —
+        the same accounting rule ``minimize_many`` charges at full budget."""
+        n_polish = rounds // self.every if self.has_polish else 0
+        return self.init_evals + rounds * self.per_round + n_polish * self.per_polish
 
 
 def _local_rows(x: Array, axis: str, n_local: int) -> Array:

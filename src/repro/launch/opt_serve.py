@@ -1,5 +1,7 @@
 """Multi-job optimization service — the popt4jlib ``PDBTExecSingleCltWrkInitSrv``
-client/server loop over the shape-bucketed scheduler (DESIGN.md §5).
+client/server loop over the shape-bucketed scheduler (DESIGN.md §5, hardened
+per §12: worker-pool flushes, streaming progress, cancellation, backpressure
+and checkpoint/resume).
 
 One JSON object per line (JSONL), over stdin/stdout (default) or TCP
 (``--tcp PORT``). The ops mirror the Java server's client protocol
@@ -8,12 +10,36 @@ One JSON object per line (JSONL), over stdin/stdout (default) or TCP
     {"op": "submit", "request": {"fn": "rastrigin", "algo": "de", "dim": 8,
                                  "max_evals": 4000, "seed": 1}}
         -> {"id": "job0", "status": "queued"}
-    {"op": "poll", "id": "job0"}      -> {"id": "job0", "status": "queued|running|done|error"}
+    {"op": "submit", "priority": 5, "request": {...}}
+        -> priority lane: the worker pool runs higher-priority buckets first
+    {"op": "poll", "id": "job0"}      -> {"id": "job0", "status": "running",
+                                          "round": 12, "n_rounds": 40,
+                                          "best_val": ..., "evals_done": ...}
     {"op": "result", "id": "job0"}    -> {"id": "job0", "status": "done",
                                           "value": ..., "arg": [...], "n_evals": ...}
+    {"op": "cancel", "id": "job0"}    -> cooperative preemption at the next
+                                         round boundary; partial result kept
+    {"op": "status"}                  -> queued/running/done counts per bucket
     {"op": "flush"}                   -> {"flushed": N}
     {"op": "stats"}                   -> scheduler + queue counters
     {"op": "quit"}                    -> {"bye": true}
+
+Unknown or already-evicted job ids yield a structured
+``{"error": "unknown-id", "id": ...}`` reply; when ``--max-pending`` is set,
+submissions over capacity are load-shed with
+``{"error": "overloaded", "retry_after_ms": ...}``.
+
+With ``--workers N`` (the production shape) bucket flushes run on a bounded
+worker-thread pool with priority lanes, so a slow bucket never blocks the
+request loop — submit/poll/cancel/status stay responsive while long jobs
+stream per-round progress. ``--checkpoint-dir`` snapshots every running
+bucket's engine state each ``--checkpoint-every`` rounds through
+``checkpoint/store.py``; after a crash or SIGKILL, restarting with
+``--resume-dir`` restores the interrupted runs under their original job ids
+and finishes them bit-identically to an uninterrupted fixed-seed run
+(DESIGN.md §12). With ``--workers 0`` the service keeps the legacy blocking
+behavior — one global op lock, flushes inline — which doubles as the soak
+benchmark's baseline (``benchmarks/service.py``).
 
 Hybrid memetic jobs (DESIGN.md §6) are plain requests with polish fields —
 they bucket separately from plain jobs because polish parameters join the
@@ -35,12 +61,10 @@ portfolios never collide into one compiled bucket:
 
 Device-sharded jobs (DESIGN.md §8) work the same way — ``devices`` is an
 ordinary request field that joins the shape-class, so sharded and
-single-device traffic never mix buckets and the service loop needs no
-changes. A request the host cannot place (more devices than visible) errors
-in its own bucket without disturbing other clients:
-
-    {"op": "submit", "request": {"fn": "rastrigin", "dim": 16, "n_islands": 8,
-                                 "devices": 8, "max_evals": 40000, "seed": 0}}
+single-device traffic never mix buckets. Sharded buckets run device-resident
+(no host round loop inside ``shard_map``) and portfolio buckets stay
+resident to preserve bit-identity (DESIGN.md §12): both stream no mid-run
+progress and refuse mid-run cancellation with a structured error.
 
 Batching policy (host-side queue): a bucket is dispatched when it reaches
 ``--max-batch`` queued jobs, when its oldest job ages past the ``--flush-ms``
@@ -56,6 +80,7 @@ dispatch.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import os
 import select
@@ -66,7 +91,8 @@ import time
 from typing import Any
 
 from repro.core.api import OptRequest
-from repro.core.scheduler import ShapeBucketScheduler
+from repro.core.scheduler import (SchedulerOverloaded, ShapeBucketScheduler,
+                                  UnknownJob)
 
 
 class OptimizationService:
@@ -74,30 +100,62 @@ class OptimizationService:
 
     Thread-safe: TCP mode serves concurrent clients against one scheduler
     (the Java server's single-client-at-a-time restriction is lifted — jobs
-    from different connections share buckets).
+    from different connections share buckets). With ``workers > 0`` the
+    scheduler runs bucket flushes on its priority worker pool and ops are
+    lock-free at this layer; with ``workers == 0`` a single op lock
+    serializes everything and flushes run inline (the legacy blocking
+    behavior, kept as the soak benchmark's baseline).
     """
 
     def __init__(self, scheduler: ShapeBucketScheduler | None = None,
-                 max_batch: int = 32, flush_ms: float = 50.0) -> None:
-        self.scheduler = scheduler or ShapeBucketScheduler()
+                 max_batch: int = 32, flush_ms: float = 50.0,
+                 workers: int = 0, max_pending: int = 0,
+                 checkpoint_dir: str | None = None,
+                 checkpoint_every: int = 8) -> None:
+        self.scheduler = scheduler or ShapeBucketScheduler(
+            workers=workers, max_pending=max_pending,
+            checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every)
         self.max_batch = max_batch
         self.flush_ms = flush_ms
         self._lock = threading.Lock()
+
+    def _oplock(self):
+        """The global op lock in blocking mode; a no-op with a worker pool
+        (the scheduler is internally thread-safe and ops return quickly)."""
+        if self.scheduler.workers:
+            return contextlib.nullcontext()
+        return self._lock
 
     # -- protocol ----------------------------------------------------------
 
     def handle(self, msg: dict[str, Any]) -> dict[str, Any]:
         """Execute one protocol op; always returns a JSON-able reply."""
         try:
-            # poll is a single dict lookup + attribute read (GIL-atomic):
-            # answer without the lock so status stays responsive while
-            # another client's bucket dispatch (compile + run) holds it.
-            # stats iterates the scheduler's dicts, so it must take the lock.
+            # poll is a dict lookup + attribute reads (GIL-atomic): answer
+            # without any lock so status/progress stay responsive while a
+            # bucket dispatch (compile + run) is in flight elsewhere.
             if msg.get("op") == "poll":
-                return {"id": msg["id"],
-                        "status": self.scheduler.poll(msg["id"]).status}
-            with self._lock:
+                resp = self.scheduler.poll(msg["id"])
+                return {"id": msg["id"], "status": resp.status,
+                        **resp.progress_dict()}
+            if msg.get("op") == "result":
+                # fetch-once: the record is evicted so a long-lived server's
+                # job table stays bounded; a second result/poll for the id
+                # yields the structured unknown-id error. In pool mode this
+                # waits on the job's completion event WITHOUT any service
+                # lock, so other clients keep being served meanwhile; in
+                # blocking mode the lock serializes the inline flush (the
+                # legacy behavior the soak benchmark uses as its baseline).
+                with self._oplock():
+                    resp = self.scheduler.result(msg["id"], evict=True)
+                return resp.to_dict()
+            with self._oplock():
                 return self._dispatch(msg)
+        except UnknownJob:
+            return {"error": "unknown-id", "id": msg.get("id")}
+        except SchedulerOverloaded as e:
+            return {"error": "overloaded",
+                    "retry_after_ms": e.retry_after_ms}
         except Exception as e:  # noqa: BLE001 — protocol errors go to the client
             return {"error": f"{type(e).__name__}: {e}"}
 
@@ -106,34 +164,38 @@ class OptimizationService:
         sched = self.scheduler
         if op == "submit":
             req = OptRequest.from_dict(msg["request"])
-            job_id = sched.submit(req, msg.get("id"))
+            job_id = sched.submit(req, msg.get("id"),
+                                  priority=int(msg.get("priority", 0)))
             resp = {"id": job_id, "status": "queued"}
             key = req.shape_class()
             if sched.pending_count(key) >= self.max_batch:
                 sched.flush_bucket(key)
                 resp["status"] = sched.poll(job_id).status
             return resp
-        if op == "result":
-            # fetch-once: the record is evicted so a long-lived server's job
-            # table stays bounded; a second result/poll for the id errors
-            return sched.result(msg["id"], evict=True).to_dict()
+        if op == "cancel":
+            return sched.cancel(msg["id"])
+        if op == "status":
+            return {"buckets": sched.bucket_status()}
         if op == "flush":
             return {"flushed": sched.flush()}
         if op == "stats":
             return dict(sched.stats(), max_batch=self.max_batch,
                         flush_ms=self.flush_ms)
         if op == "quit":
-            sched.flush()
+            if sched.workers:
+                sched.drain()       # finish in-flight work before goodbye
+            else:
+                sched.flush()
             return {"bye": True}
         raise ValueError(f"unknown op {op!r}")
 
     # -- deadline flush ----------------------------------------------------
 
     def tick(self, now: float | None = None) -> int:
-        """Flush buckets whose oldest job aged past the deadline."""
+        """Dispatch buckets whose oldest job aged past the deadline."""
         now = time.monotonic() if now is None else now
         n = 0
-        with self._lock:
+        with self._oplock():
             for key, _, oldest in self.scheduler.pending_buckets():
                 if (now - oldest) * 1e3 >= self.flush_ms:
                     n += len(self.scheduler.flush_bucket(key))
@@ -141,8 +203,7 @@ class OptimizationService:
 
     def next_deadline(self) -> float | None:
         """Monotonic time of the earliest pending flush, or None if idle."""
-        with self._lock:
-            buckets = self.scheduler.pending_buckets()
+        buckets = self.scheduler.pending_buckets()
         if not buckets:
             return None
         return min(oldest for _, _, oldest in buckets) + self.flush_ms / 1e3
@@ -186,6 +247,8 @@ def serve_stdin(service: OptimizationService) -> None:
         chunk = os.read(fd, 1 << 16)
         if not chunk:                     # EOF: run what's left, then exit
             service.handle({"op": "flush"})
+            if service.scheduler.workers:
+                service.scheduler.drain()
             return
         buf += chunk
 
@@ -225,6 +288,8 @@ def serve_tcp(service: OptimizationService, host: str, port: int) -> None:
 
 
 def main() -> None:
+    """CLI entry point: parse flags, resume interrupted runs when asked, then
+    serve JSONL over stdin or TCP."""
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--max-batch", type=int, default=32,
                     help="flush a bucket as soon as it holds this many jobs")
@@ -233,10 +298,30 @@ def main() -> None:
     ap.add_argument("--tcp", type=int, default=None, metavar="PORT",
                     help="serve TCP-JSONL on this port instead of stdin")
     ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="bucket-flush worker threads; 0 = legacy blocking "
+                         "mode (flushes inline under one global op lock)")
+    ap.add_argument("--max-pending", type=int, default=0,
+                    help="backpressure: load-shed submissions once this many "
+                         "jobs are queued (0 = unbounded)")
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="snapshot running buckets' engine state under DIR")
+    ap.add_argument("--checkpoint-every", type=int, default=8,
+                    help="sync rounds between bucket state snapshots")
+    ap.add_argument("--resume-dir", default=None, metavar="DIR",
+                    help="restore interrupted runs from DIR at startup "
+                         "(also becomes the checkpoint dir unless one is set)")
     args = ap.parse_args()
 
-    service = OptimizationService(max_batch=args.max_batch,
-                                  flush_ms=args.flush_ms)
+    ckpt = args.checkpoint_dir or args.resume_dir
+    service = OptimizationService(
+        max_batch=args.max_batch, flush_ms=args.flush_ms,
+        workers=args.workers, max_pending=args.max_pending,
+        checkpoint_dir=ckpt, checkpoint_every=args.checkpoint_every)
+    if args.resume_dir is not None:
+        summary = service.scheduler.resume(args.resume_dir)
+        print(f"[opt_serve] resume: {json.dumps(summary)}",
+              file=sys.stderr, flush=True)
     if args.tcp is not None:
         serve_tcp(service, args.host, args.tcp)
     else:

@@ -9,6 +9,12 @@ import pytest
 # a container without dev requirements sees skips, not collection errors.
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: multi-second fault-injection tests (subprocess SIGKILL harness)")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

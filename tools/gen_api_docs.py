@@ -38,6 +38,8 @@ MODULES = (
     "repro.core.ea",
     "repro.core.bh",
     "repro.core.mc",
+    "repro.checkpoint.store",
+    "repro.launch.opt_serve",
     "repro.optim.descent",
     "repro.optim.numgrad",
     "repro.optim.adam",
