@@ -78,6 +78,91 @@ def bench(functions: list[str], device_counts: list[int], **sizes) -> list[dict]
     return rows
 
 
+def straggler_bench(fn: str, *, islands: int, pop: int, dim: int,
+                    sync_every: int, rounds: int, slow_factor: int = 4,
+                    base_ms: float = 25.0) -> dict:
+    """Straggler study (ISSUE 8 satellite): one island is ``slow_factor``x
+    slower than the rest; compare **island-round throughput** of the barrier
+    engine vs the async staleness-bounded engine under the same fault.
+
+    The fault is injected host-side through the engines' own hooks, not
+    modeled analytically: both runs go through the host-stepped round loop
+    (``round_callback``), where a per-round sleep stands in for the slow
+    island's extra compute.
+
+    The straggler's step time is calibrated from a faultless timed run:
+    ``fast_step = max(base_ms, measured per-tick compute)`` and the slow
+    island takes ``slow_factor * fast_step``.
+
+    * Barrier: the ``lax.ppermute`` round is a global barrier, so EVERY round
+      waits the straggler's full step on top of its own compute — the
+      callback sleeps ``slow_factor*fast_step`` once per round, and all
+      ``islands`` islands advance per round.
+    * Async: the mailbox engine lets the fast islands tick at their own
+      cadence — the callback sleeps one ``fast_step`` per *tick*, and the
+      straggler island steps only every ``slow_factor`` ticks
+      (``AsyncSchedule.from_cadences``), exactly as many generations per
+      wall-second as its 4x-slow hardware would manage.
+
+    Reported throughput is island-rounds/second: how many island round-steps
+    the federation completes per wall-clock second. The acceptance bar
+    (async >= 2x barrier under a 4x straggler) is asserted by ``main``.
+    """
+    import dataclasses
+
+    from repro.core import AsyncSchedule
+
+    f = get(fn, dim)
+    budget = islands * pop * (rounds * sync_every + 1)
+    cfg_b = IslandConfig(n_islands=islands, pop=pop, dim=dim,
+                         sync_every=sync_every, migration="ring",
+                         max_evals=budget)
+    cfg_a = dataclasses.replace(cfg_b, sync_policy="async",
+                                max_staleness=slow_factor)
+
+    def run(cfg, schedule, sleep_s):
+        hook = lambda r, ba, bv: time.sleep(sleep_s)  # noqa: E731
+        opt = IslandOptimizer(ALGORITHMS["de"], cfg, schedule=schedule,
+                              round_callback=hook)
+        opt.minimize(f, jax.random.PRNGKey(0))        # compile/warm
+        t0 = time.perf_counter()
+        opt.minimize(f, jax.random.PRNGKey(0))
+        wall = time.perf_counter() - t0
+        return opt, wall
+
+    # Calibrate the fast islands' step time: a faultless timed run gives the
+    # engine's own per-tick compute, and the straggler's step is modeled as
+    # ``slow_factor`` times that (floored at base_ms so a toy config still
+    # injects a visible fault). The barrier round then waits the straggler's
+    # FULL step on top of its own compute; the async tick only ever waits the
+    # fast step.
+    _, wall_0 = run(cfg_b, None, 0.0)
+    # 1.5x the measured tick keeps the injected fault dominant over the
+    # host-stepped loop's dispatch overhead (which both engines pay alike).
+    fast_step = max(base_ms / 1e3, 1.5 * wall_0 / rounds)
+    _, wall_b = run(cfg_b, None, slow_factor * fast_step)
+    sync_tp = islands * rounds / wall_b
+
+    cadences = [1] * (islands - 1) + [slow_factor]    # island -1 is 4x slow
+    sched = AsyncSchedule.from_cadences(cadences, rounds)
+    opt_a, wall_a = run(cfg_a, sched, fast_step)
+    step_m, _ = opt_a.recorded_schedule.materialize(rounds, islands)
+    async_tp = float(step_m.sum()) / wall_a
+
+    row = {
+        "fn": fn, "islands": islands, "slow_factor": slow_factor,
+        "base_ms": base_ms, "rounds": rounds,
+        "sync_wall_s": round(wall_b, 4),
+        "async_wall_s": round(wall_a, 4),
+        "sync_island_rounds_per_s": round(sync_tp, 2),
+        "async_island_rounds_per_s": round(async_tp, 2),
+        "async_over_sync": round(async_tp / sync_tp, 3),
+    }
+    print(f"straggler {fn:12s} sync {sync_tp:8.2f} island-rounds/s | "
+          f"async {async_tp:8.2f} | {row['async_over_sync']:.2f}x")
+    return row
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
@@ -94,6 +179,11 @@ def main() -> None:
     ap.add_argument("--min-speedup", type=float, default=1.0,
                     help="fail unless the widest mesh strictly beats this "
                          "on at least one function")
+    ap.add_argument("--straggler-rounds", type=int, default=40,
+                    help="ticks/rounds in the straggler study")
+    ap.add_argument("--min-straggler-ratio", type=float, default=2.0,
+                    help="fail unless async island-round throughput beats "
+                         "the barrier engine by this under a 4x straggler")
     ap.add_argument("--out", default="BENCH_distributed.json")
     args = ap.parse_args()
 
@@ -101,6 +191,7 @@ def main() -> None:
     counts = [d for d in (1, 2, 4, 8) if d <= min(n_dev, args.islands)]
     if args.smoke:
         args.rounds, args.repeats = 25, 2
+        args.straggler_rounds = 16
         counts = [1, counts[-1]] if counts[-1] > 1 else counts
 
     budget = args.islands * args.pop * (args.rounds * args.sync_every + 1)
@@ -108,6 +199,11 @@ def main() -> None:
                  islands=args.islands, pop=args.pop, dim=args.dim,
                  sync_every=args.sync_every, budget=budget,
                  repeats=args.repeats)
+
+    straggler = straggler_bench(
+        args.functions[0], islands=args.islands, pop=min(args.pop, 64),
+        dim=args.dim, sync_every=args.sync_every,
+        rounds=args.straggler_rounds)
 
     widest = counts[-1]
     best_by_fn = {fn: max(r["speedup"] for r in rows
@@ -122,6 +218,7 @@ def main() -> None:
         "smoke": args.smoke, "rows": rows,
         "speedup_at_widest_by_fn": best_by_fn,
         "best_speedup": best,
+        "straggler": straggler,
     }
     with open(args.out, "w") as fh:
         json.dump(rec, fh, indent=2)
@@ -131,6 +228,11 @@ def main() -> None:
     if best <= args.min_speedup:
         raise SystemExit(
             f"no function scaled past {args.min_speedup}x at {widest} devices")
+    if straggler["async_over_sync"] < args.min_straggler_ratio:
+        raise SystemExit(
+            f"async throughput under a 4x straggler was only "
+            f"{straggler['async_over_sync']}x the barrier engine's "
+            f"(need >= {args.min_straggler_ratio}x)")
 
 
 if __name__ == "__main__":

@@ -5,7 +5,8 @@ from repro.core.api import (  # noqa: F401
     ObserverHub, OptimizeResult, Optimizer, OptRequest, OptResponse)
 from repro.core.executor import ExecutorConfig, make_batch_evaluator  # noqa: F401
 from repro.core.islands import (  # noqa: F401
-    BucketStepper, IslandConfig, IslandOptimizer, MetaHeuristic)
+    AsyncSchedule, BucketStepper, IslandConfig, IslandOptimizer,
+    MetaHeuristic)
 from repro.core.mesh import MeshConfig  # noqa: F401
 from repro.core.pipeline import (  # noqa: F401
     explore_then_polish, explore_then_polish_many)

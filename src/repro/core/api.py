@@ -70,7 +70,7 @@ SHAPE_CLASS_FIELDS = (
     "fn", "algo", "dim", "pop", "n_islands", "sync_every", "migration",
     "n_migrants", "share_incumbent", "max_evals", "backend", "devices",
     "params", "polish", "polish_every", "polish_topk", "polish_steps",
-    "portfolio",
+    "portfolio", "sync_policy", "max_staleness", "warm",
 )
 
 
@@ -128,6 +128,19 @@ class OptRequest:
     # compiled into the program, so portfolio and homogeneous jobs (or two
     # different portfolios) never share a bucket.
     portfolio: tuple[str, ...] = ()
+    # Async staleness-bounded islands (DESIGN.md §13): "barrier" is the
+    # lockstep ppermute engine, "async" the per-island-cadence mailbox scan.
+    # Both are part of the shape-class — the async program carries mailbox
+    # state leaves and schedule-mask scan inputs the barrier one doesn't, and
+    # max_staleness is compiled into the adoption predicate.
+    sync_policy: str = "barrier"    # barrier | async
+    max_staleness: int = 0          # adopt migrants at most this many rounds old
+    # Warm-start immigrants — the cross-host federation hop
+    # (launch/federate.py): candidate vectors adopted into island 0's worst
+    # slots before round 0. Value-keyed into the shape-class, so every job in
+    # a bucket shares one warm batch (the coordinator submits one job per
+    # worker per leg, so this never fragments buckets in practice).
+    warm: tuple[tuple[float, ...], ...] = ()
 
     def shape_class(self) -> tuple:
         """Bucket key: everything that feeds the compiled program's shape or
@@ -148,6 +161,9 @@ class OptRequest:
         params = _freeze(d.pop("params", ()))
         if "portfolio" in d:
             d["portfolio"] = tuple(d["portfolio"])
+        if "warm" in d:
+            d["warm"] = tuple(
+                tuple(float(x) for x in row) for row in d["warm"])
         names = {f.name for f in dataclasses.fields(cls)}
         unknown = set(d) - names
         if unknown:

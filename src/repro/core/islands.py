@@ -95,6 +95,17 @@ class IslandConfig:
     # selects portfolio mode — pass algo_maker=None; per-policy params go in
     # IslandOptimizer(params={"de": {...}, ...}).
     portfolio: tuple[str, ...] = ()
+    # Async staleness-bounded islands (DESIGN.md §13): "async" drops the
+    # global round barrier — islands advance on their own cadence (an
+    # AsyncSchedule) and exchange migrants through a fixed-shape mailbox ring
+    # (core.migration.mailbox_*) instead of the lockstep exchange. Requires
+    # migration in ("ring", "none"); with n_islands == 1 the mailbox is a
+    # self-loop no-op and the engine runs the barrier path unchanged. An
+    # all-ones schedule with max_staleness=0 degrades bit-identically to the
+    # barrier engine (tests/test_async_islands.py).
+    sync_policy: str = "barrier"  # barrier | async
+    max_staleness: int = 0        # adopt migrants at most this many rounds old
+    mailbox_slots: int = 4        # per-island mailbox ring capacity
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,6 +124,62 @@ class MetaHeuristic:
     evals_per_gen: int
     init_evals: int
     step_override: Callable[[State, Array], State] | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncSchedule:
+    """Record/replay hook for the async engine's mailbox (DESIGN.md §13).
+
+    ``step[t, i]`` — island ``i`` runs a sync round at tick ``t``;
+    ``deliver[t, i]`` — the migrant batch island ``i`` posts at tick ``t``
+    reaches its ring successor (False models a dropped message). Both
+    default to all-ones — every island on every tick, every delivery on
+    time — which is exactly the barrier cadence. A ``seed`` generates random
+    Bernoulli masks instead (host-side numpy, so the jitted run only ever
+    sees concrete arrays). Whatever arrays a run actually used are recorded
+    in ``IslandOptimizer.recorded_schedule``; feeding that schedule back in
+    replays the run bit-identically (the record/replay contract
+    ``tests/test_async_islands.py`` enforces).
+    """
+
+    step: Any = None          # (n_rounds, n_islands) bool, or None
+    deliver: Any = None       # (n_rounds, n_islands) bool, or None
+    seed: int | None = None   # random masks when the arrays are absent
+    step_prob: float = 0.75
+    deliver_prob: float = 0.75
+
+    def materialize(self, n_rounds: int, n_islands: int
+                    ) -> tuple[np.ndarray, np.ndarray]:
+        """Concrete ``(step, deliver)`` bool masks of shape
+        ``(n_rounds, n_islands)`` — explicit arrays are validated, missing
+        ones are filled from ``seed`` (or all-ones without one)."""
+        rng = np.random.RandomState(0 if self.seed is None else self.seed)
+
+        def mask(a: Any, p: float, name: str) -> np.ndarray:
+            if a is not None:
+                a = np.asarray(a, dtype=bool)
+                if a.shape != (n_rounds, n_islands):
+                    raise ValueError(
+                        f"AsyncSchedule.{name} has shape {a.shape}, engine "
+                        f"needs {(n_rounds, n_islands)}")
+                return a
+            if self.seed is None:
+                return np.ones((n_rounds, n_islands), dtype=bool)
+            return rng.random_sample((n_rounds, n_islands)) < p
+
+        return (mask(self.step, self.step_prob, "step"),
+                mask(self.deliver, self.deliver_prob, "deliver"))
+
+    @classmethod
+    def from_cadences(cls, cadences, n_rounds: int) -> "AsyncSchedule":
+        """Deterministic per-island cadence schedule: island ``i`` steps on
+        ticks ``t`` with ``t % cadences[i] == 0`` (a straggler with cadence 4
+        completes a round every 4th tick); every delivery fires."""
+        c = np.asarray(cadences, dtype=int)
+        if (c < 1).any():
+            raise ValueError("cadences must be >= 1")
+        step = (np.arange(n_rounds)[:, None] % c[None, :]) == 0
+        return cls(step=step, deliver=np.ones_like(step))
 
 
 AlgoMaker = Callable[..., MetaHeuristic]
@@ -141,10 +208,35 @@ class IslandOptimizer:
         mesh_cfg: MeshConfig | None = None,
         exec_cfg: ExecutorConfig = ExecutorConfig(),
         round_callback: Callable[[int, Array, Array], None] | None = None,
+        schedule: AsyncSchedule | None = None,
     ) -> None:
         self.algo_maker = algo_maker
         self.cfg = cfg
         self.params = dict(params or {})
+        # Async staleness-bounded mode (DESIGN.md §13). With one island the
+        # mailbox is a self-loop no-op, so the engine keeps the barrier path.
+        if cfg.sync_policy not in ("barrier", "async"):
+            raise ValueError(f"unknown sync_policy {cfg.sync_policy!r}")
+        if cfg.sync_policy == "async" and cfg.migration == "starvation":
+            raise ValueError(
+                "async islands support ring|none migration only: starvation "
+                "elects its host by a global argmin over every island's live "
+                "count, which is inherently a barrier")
+        if cfg.max_staleness < 0:
+            raise ValueError("max_staleness must be >= 0")
+        if cfg.mailbox_slots < 1:
+            raise ValueError("mailbox_slots must be >= 1")
+        self._async = cfg.sync_policy == "async" and cfg.n_islands > 1
+        if schedule is not None and not self._async:
+            raise ValueError(
+                "an AsyncSchedule needs sync_policy='async' and n_islands > 1")
+        self.schedule = schedule
+        # The schedule the last async run actually used (record side of the
+        # record/replay contract); pass it back as ``schedule`` to replay.
+        self.recorded_schedule: AsyncSchedule | None = None
+        # High-water mark of adopted-migrant staleness in the last async run
+        # (-1 = nothing adopted) — always <= cfg.max_staleness by construction.
+        self.last_max_staleness: int | None = None
         # Heterogeneous portfolio mode (DESIGN.md §10): cfg.portfolio names
         # the per-island policies; the single algo_maker is unused.
         if cfg.portfolio:
@@ -327,6 +419,117 @@ class IslandOptimizer:
 
         return round_fn
 
+    def _async_round_fn(self, algo) -> Callable[[State, Array, Array, Array], State]:
+        """The async sibling of :meth:`_round_fn` (DESIGN.md §13):
+        ``(state, round_key, step_row, deliver_row) -> state``.
+
+        The state carries the per-island mailbox leaves
+        (``migration.MAILBOX_KEYS``) alongside the policy leaves. Each tick:
+        islands selected by ``step_row`` run ``sync_every`` generations (the
+        rest keep their exact old leaves — the same global key table is
+        derived either way, so masked islands never perturb the key
+        discipline); stepping islands post their best-k to their ring
+        successor's mailbox gated by ``deliver_row`` and adopt the newest
+        batch at most ``max_staleness`` rounds stale; per-island round
+        counters advance by ``step_row``. With all-ones masks every op
+        reduces to the barrier round body's values, which is the
+        ``max_staleness=0`` degradation contract.
+        """
+        from repro.core import portfolio as pf  # late: pf imports the algos
+        cfg = self.cfg
+        port = algo if cfg.portfolio else None
+        axis, n_shards = self._axis, self._n_shards
+        n_local = cfg.n_islands // n_shards
+        if port is None:
+            step = (algo.step_override if algo.step_override is not None
+                    else algo.gen)
+
+        def local(x: Array) -> Array:
+            if axis is not None and n_shards > 1:
+                return _local_rows(x, axis, n_local)
+            return x
+
+        def round_fn(state: State, rk: Array, step_g: Array,
+                     deliver_g: Array) -> State:
+            br = None
+            if port is not None and port.n_branches > 1:
+                br = local(jnp.asarray(port.branch_of))
+            step_row, deliver_row = local(step_g), local(deliver_g)
+            policy = {k: v for k, v in state.items()
+                      if k not in mig.MAILBOX_KEYS}
+            box = {k: state[k] for k in mig.MAILBOX_KEYS}
+
+            def one_gen(carry: State, k: Array) -> tuple[State, None]:
+                ks = local(jax.random.split(k, cfg.n_islands))
+                if port is not None:
+                    return port.step_stacked(carry, ks, br), None
+                return jax.vmap(step)(carry, ks), None
+
+            gen_keys = jax.random.split(rk, cfg.sync_every)
+            # The step mask is constant across a tick's generations, so it is
+            # applied ONCE after the gens scan, never inside it: the inner
+            # scan body stays HLO-identical to the barrier engine's, which is
+            # what makes the max_staleness=0 degradation bit-exact (a select
+            # inside the loop body changes XLA fusion of the policy
+            # arithmetic and drifts pso by ulps). The select itself is pure
+            # data movement — non-stepping islands keep their exact leaves.
+            old_policy = policy
+            policy, _ = jax.lax.scan(one_gen, policy, gen_keys)
+            policy = jax.tree.map(
+                lambda a, b: jnp.where(
+                    step_row.reshape(step_row.shape + (1,) * (a.ndim - 1)),
+                    a, b),
+                policy, old_policy)
+
+            if cfg.migration == "ring":
+                old_pop, old_fit = policy["pop"], policy["fit"]
+                box = mig.mailbox_post(
+                    box, old_pop, old_fit, cfg.n_migrants,
+                    step_row & deliver_row, axis=axis, n_shards=n_shards)
+                pop, fit, box = mig.mailbox_adopt(
+                    box, old_pop, old_fit, cfg.max_staleness, step_row)
+                policy = {**policy, "pop": pop, "fit": fit}
+                if port is not None or pf.has_adopt_state(algo.name):
+                    # Same adopted-slot detection + aux re-init as the
+                    # barrier round body (DESIGN.md §10).
+                    adopted = (jnp.any(pop != old_pop, axis=-1)
+                               | (fit != old_fit))
+                    if port is not None:
+                        policy = port.adopt_stacked(policy, adopted, br)
+                    else:
+                        policy = jax.vmap(partial(pf.adopt_native, algo.name))(
+                            policy, adopted)
+
+            if cfg.share_incumbent:
+                bv, ba = policy["best_val"], policy["best_arg"]
+                if axis is not None and n_shards > 1:
+                    gbv = jax.lax.all_gather(bv, axis, tiled=True)
+                    gba = jax.lax.all_gather(ba, axis, tiled=True)
+                else:
+                    gbv, gba = bv, ba
+                gi = jnp.argmin(gbv)
+                policy = {
+                    **policy,
+                    "best_val": jnp.full_like(bv, gbv[gi]),
+                    "best_arg": jnp.broadcast_to(gba[gi], ba.shape),
+                }
+
+            box = {**box,
+                   "round_ctr": box["round_ctr"] + step_row.astype(jnp.int32)}
+            return {**policy, **box}
+
+        return round_fn
+
+    def _materialize_schedule(self, n_rounds: int
+                              ) -> tuple[Array, Array]:
+        """Concrete (step, deliver) masks for an async run, recording them in
+        ``recorded_schedule`` — the record half of record/replay."""
+        sched = self.schedule if self.schedule is not None else AsyncSchedule()
+        step, deliver = sched.materialize(n_rounds, self.cfg.n_islands)
+        self.recorded_schedule = AsyncSchedule(
+            step=step, deliver=deliver, seed=sched.seed)
+        return jnp.asarray(step), jnp.asarray(deliver)
+
     def _polish(self, f: Function) -> tuple[Callable[[State], State] | None, int]:
         """(state -> state polish pass, evals per polished point) — the hybrid
         memetic layer (DESIGN.md §6), or ``(None, 0)`` when ``cfg.polish`` is
@@ -390,17 +593,68 @@ class IslandOptimizer:
 
         return scan_rounds
 
+    def _async_scan_rounds(
+        self, algo, polish_pass: Callable[[State], State] | None,
+    ) -> Callable[[State, Array, Array, Array], tuple[State, Array]]:
+        """Async sibling of :meth:`_scan_rounds`: the schedule masks join the
+        scan's per-tick inputs — ``(state, round_keys, step, deliver) ->
+        (state, history)`` — so one compiled program serves every schedule."""
+        cfg = self.cfg
+        every = max(1, cfg.polish_every)
+        axis, n_shards = self._axis, self._n_shards
+        round_fn = self._async_round_fn(algo)
+
+        def scan_rounds(state: State, round_keys: Array, step_m: Array,
+                        deliver_m: Array) -> tuple[State, Array]:
+            def body(carry: State, xs) -> tuple[State, Array]:
+                rk, r, srow, drow = xs
+                carry = round_fn(carry, rk, srow, drow)
+                if polish_pass is not None:
+                    carry = jax.lax.cond(
+                        (r + 1) % every == 0, polish_pass, lambda s: s, carry)
+                point = jnp.min(carry["best_val"])
+                if axis is not None and n_shards > 1:
+                    point = jax.lax.pmin(point, axis)
+                return carry, point
+
+            rs = jnp.arange(round_keys.shape[0])
+            return jax.lax.scan(body, state, (round_keys, rs, step_m, deliver_m))
+
+        return scan_rounds
+
     def _run_fn(
         self, algo, polish_pass: Callable[[State], State] | None = None,
-    ) -> Callable[[State, Array], tuple[Array, Array, Array]]:
+    ) -> Callable[..., tuple]:
         """Whole-run device program: scan over sync rounds (polishing on the
         ``polish_every`` cadence), select the global incumbent on device,
         return ``(best_arg, best_val, history)``. With an island mesh the scan
         runs under ``shard_map`` (one shard per island block) and the final
-        selection happens on the reassembled global state."""
-        stacked = self.cfg.n_islands > 1
-        scan_rounds = self._scan_rounds(algo, polish_pass)
+        selection happens on the reassembled global state.
 
+        The async engine's program additionally takes the schedule masks and
+        returns the adopted-staleness high-water mark as a fourth output:
+        ``(state, round_keys, step, deliver) -> (arg, val, history, stale)``.
+        """
+        stacked = self.cfg.n_islands > 1
+        if self._async:
+            scan_rounds = self._async_scan_rounds(algo, polish_pass)
+            if self._island_mesh is None:
+                body = scan_rounds
+            else:
+                in_specs, out_specs = mesh_mod.island_specs(self._axis, 3)
+                body = mesh_mod.shard_map(
+                    scan_rounds, self._island_mesh,
+                    in_specs=in_specs, out_specs=out_specs)
+
+            def run_async(state: State, round_keys: Array, step_m: Array,
+                          deliver_m: Array):
+                state, history = body(state, round_keys, step_m, deliver_m)
+                arg, val = _select_best(state, stacked)
+                return arg, val, history, jnp.max(state["stale_seen"])
+
+            return run_async
+
+        scan_rounds = self._scan_rounds(algo, polish_pass)
         if self._island_mesh is None:
             def run(state: State, round_keys: Array) -> tuple[Array, Array, Array]:
                 state, history = scan_rounds(state, round_keys)
@@ -408,10 +662,10 @@ class IslandOptimizer:
                 return arg, val, history
             return run
 
-        axis = self._axis
+        in_specs, out_specs = mesh_mod.island_specs(self._axis, 1)
         sharded = mesh_mod.shard_map(
             scan_rounds, self._island_mesh,
-            in_specs=(P(axis), P()), out_specs=(P(axis), P()))
+            in_specs=in_specs, out_specs=out_specs)
 
         def run(state: State, round_keys: Array) -> tuple[Array, Array, Array]:
             state, history = sharded(state, round_keys)
@@ -435,6 +689,82 @@ class IslandOptimizer:
             return jax.device_put(x, NamedSharding(self.mesh, spec))
 
         return jax.tree.map(put, state)
+
+    def _init_state(self, algo, ik: Array) -> State:
+        """Fresh engine state from init key ``ik`` — the one init rule every
+        path (minimize, jobs axis, host stepper) shares. Async mode merges
+        the mailbox leaves (``migration.mailbox_init``) into the state dict,
+        so checkpointing and sharding see one pytree."""
+        cfg = self.cfg
+        if cfg.portfolio:
+            state = algo.init_stacked(jax.random.split(ik, cfg.n_islands))
+        elif cfg.n_islands > 1:
+            state = jax.vmap(algo.init)(jax.random.split(ik, cfg.n_islands))
+        else:
+            state = algo.init(ik)
+        if self._async:
+            state = {**state, **mig.mailbox_init(
+                cfg.n_islands, cfg.mailbox_slots, cfg.n_migrants, cfg.dim)}
+        return state
+
+    def _warm_fn(self, f: Function, algo) -> Callable[[State, Array, Array], State]:
+        """``(state, warm (W, dim), warm_fit (W,)) -> state`` — immigration at
+        init, the cross-host federation hop (``launch/federate.py``,
+        DESIGN.md §13): adopt externally-routed candidates into island 0's
+        worst slots through the same worst-k replacement rule migration uses,
+        re-initializing destination-policy aux slots and refreshing the
+        incumbent. Deterministic, so warm-started runs stay reproducible."""
+        from repro.core import portfolio as pf  # late: pf imports the algos
+        cfg = self.cfg
+        port = algo if cfg.portfolio else None
+        stacked = cfg.n_islands > 1
+
+        def inject(state: State, w: Array, wf: Array) -> State:
+            if stacked:
+                old_pop, old_fit = state["pop"][0], state["fit"][0]
+                pop0, fit0 = mig._replace_worst(old_pop, old_fit, w, wf)
+                pop = state["pop"].at[0].set(pop0)
+                fit = state["fit"].at[0].set(fit0)
+                state = {**state, "pop": pop, "fit": fit}
+                if port is not None or pf.has_adopt_state(algo.name):
+                    changed = (jnp.any(pop0 != old_pop, axis=-1)
+                               | (fit0 != old_fit))
+                    adopted = (jnp.zeros(fit.shape, bool).at[0].set(changed))
+                    if port is not None:
+                        br = (jnp.asarray(port.branch_of)
+                              if port.n_branches > 1 else None)
+                        state = port.adopt_stacked(state, adopted, br)
+                    else:
+                        state = jax.vmap(partial(pf.adopt_native, algo.name))(
+                            state, adopted)
+                i = jnp.argmin(fit0)
+                better = fit0[i] < state["best_val"][0]
+                bv = state["best_val"].at[0].set(
+                    jnp.where(better, fit0[i], state["best_val"][0]))
+                ba = state["best_arg"].at[0].set(
+                    jnp.where(better, pop0[i], state["best_arg"][0]))
+                return {**state, "best_val": bv, "best_arg": ba}
+            old_pop, old_fit = state["pop"], state["fit"]
+            pop, fit = mig._replace_worst(old_pop, old_fit, w, wf)
+            state = {**state, "pop": pop, "fit": fit}
+            if pf.has_adopt_state(algo.name):
+                changed = (jnp.any(pop != old_pop, axis=-1) | (fit != old_fit))
+                state = pf.adopt_native(algo.name, state, changed)
+            return track_best(state, pop, fit)
+
+        return inject
+
+    def _inject_warm(self, f: Function, algo, state: State, warm) -> State:
+        """Host-side warm-start: evaluate the candidates with the run's own
+        evaluator (same compiled backend as generation steps) and adopt them
+        into the freshly-initialized state. Runs before sharding."""
+        w = jnp.asarray(warm, jnp.float32)
+        if w.ndim != 2 or w.shape[1] != self.cfg.dim:
+            raise ValueError(
+                f"warm candidates must have shape (W, {self.cfg.dim}), "
+                f"got {w.shape}")
+        wf = self._evaluator(f)(w)
+        return self._warm_fn(f, algo)(state, w, wf)
 
     def _budget(self, per_gen_total: int, init_total: int,
                 polish_per_point: int = 0) -> tuple[int, int, int, int]:
@@ -483,12 +813,17 @@ class IslandOptimizer:
         self._many_cache[ck] = (f.fn, algo, run, pp)
         return algo, run, pp
 
-    def minimize(self, f: Function, key: Array) -> OptimizeResult:
+    def minimize(self, f: Function, key: Array,
+                 warm: Any = None) -> OptimizeResult:
         """Run the full eval budget on objective ``f`` from PRNG ``key``.
 
         Device-resident (one jitted scan, one host transfer) unless
         ``round_callback`` is set; either path yields the same trajectory for
         a fixed key — including the polish cadence when ``cfg.polish`` is on.
+
+        ``warm`` (optional, (W, dim)) are externally-routed immigrants —
+        federation migrants — adopted into the initial population before
+        round 0 (see :meth:`_warm_fn`).
         """
         cfg = self.cfg
         if self.round_callback is not None and self._island_mesh is not None:
@@ -506,38 +841,51 @@ class IslandOptimizer:
             per_gen_total, init_total, pp)
 
         key, ik = jax.random.split(key)
-        if cfg.portfolio:
-            state = algo.init_stacked(jax.random.split(ik, cfg.n_islands))
-        elif cfg.n_islands > 1:
-            init_keys = jax.random.split(ik, cfg.n_islands)
-            state = jax.vmap(algo.init)(init_keys)
-        else:
-            state = algo.init(ik)
+        state = self._init_state(algo, ik)
+        if warm is not None and len(warm):
+            state = self._inject_warm(f, algo, state, warm)
         state = self._shard_state(state)
         round_keys = _chain_split(key, n_rounds)
+        if self._async:
+            step_m, deliver_m = self._materialize_schedule(n_rounds)
 
         ctx = self.mesh if self.mesh is not None else _nullcontext()
         with ctx:
             if self.round_callback is None:
                 # Device-resident path: one jit, one host pull at the end.
-                arg, val, history = jax.device_get(run(state, round_keys))
+                if self._async:
+                    arg, val, history, stale = jax.device_get(
+                        run(state, round_keys, step_m, deliver_m))
+                    self.last_max_staleness = int(stale)
+                else:
+                    arg, val, history = jax.device_get(run(state, round_keys))
             else:
                 # Host-stepped path: round granularity for checkpoint/coupling.
                 # Polish applies on the same cadence, BEFORE the history/
                 # callback read, mirroring the device-resident scan body.
-                round_jit = jax.jit(self._round_fn(algo), donate_argnums=0)
+                if self._async:
+                    around = jax.jit(self._async_round_fn(algo),
+                                     donate_argnums=0)
+                    round_jit = lambda s, r: around(  # noqa: E731
+                        s, round_keys[r], step_m[r], deliver_m[r])
+                else:
+                    brond = jax.jit(self._round_fn(algo), donate_argnums=0)
+                    round_jit = lambda s, r: brond(s, round_keys[r])  # noqa: E731
                 polish_jit = (jax.jit(polish_pass, donate_argnums=0)
                               if polish_pass is not None else None)
                 every = max(1, cfg.polish_every)
                 history = []
                 for r in range(n_rounds):
-                    state = round_jit(state, round_keys[r])
+                    state = round_jit(state, r)
                     if polish_jit is not None and (r + 1) % every == 0:
                         state = polish_jit(state)
                     bv = state["best_val"]
                     gval = jnp.min(bv) if cfg.n_islands > 1 else bv
                     history.append(float(gval))
                     self.round_callback(r, state["best_arg"], state["best_val"])
+                if self._async:
+                    self.last_max_staleness = int(
+                        jnp.max(state["stale_seen"]))
                 arg, val = _select_best(state, cfg.n_islands > 1)
                 history = np.asarray(history, dtype=np.float32)
 
@@ -590,7 +938,56 @@ class IslandOptimizer:
         n_rounds, _, _, _ = self._budget(*self._eval_totals(algo), pp)
         stacked = cfg.n_islands > 1
 
-        if self._island_mesh is None:
+        if self._async and self._island_mesh is None:
+            # Async jobs axis: every job replays minimize's async program
+            # under one shared (replicated) schedule; the masks are data, so
+            # one compiled program serves every schedule of this length.
+            run = self._run_fn(algo, polish_pass)
+
+            def one_job_async(k: Array, step_m: Array, deliver_m: Array):
+                key, ik = jax.random.split(k)
+                state = self._init_state(algo, ik)
+                return run(state, _chain_split(key, n_rounds),
+                           step_m, deliver_m)
+
+            many = jax.jit(jax.vmap(one_job_async, in_axes=(0, None, None)))
+        elif self._async:
+            axis, n_shards = self._axis, self._n_shards
+            n_local = cfg.n_islands // n_shards
+            scan_rounds = self._async_scan_rounds(algo, polish_pass)
+
+            def one_job_local_async(k: Array, step_m: Array, deliver_m: Array):
+                key, ik = jax.random.split(k)
+                iks = jax.random.split(ik, cfg.n_islands)
+                if n_shards > 1:
+                    iks = _local_rows(iks, axis, n_local)
+                if cfg.portfolio:
+                    br = None
+                    if algo.n_branches > 1:
+                        br = jnp.asarray(algo.branch_of)
+                        if n_shards > 1:
+                            br = _local_rows(br, axis, n_local)
+                    state = algo.init_stacked(iks, br)
+                else:
+                    state = jax.vmap(algo.init)(iks)
+                state = {**state, **mig.mailbox_init(
+                    n_local, cfg.mailbox_slots, cfg.n_migrants, cfg.dim)}
+                return scan_rounds(state, _chain_split(key, n_rounds),
+                                   step_m, deliver_m)
+
+            sharded = mesh_mod.shard_map(
+                jax.vmap(one_job_local_async, in_axes=(0, None, None)),
+                self._island_mesh,
+                in_specs=(P(), P(), P()), out_specs=(P(None, axis), P()))
+
+            def many_sharded_async(keys: Array, step_m: Array,
+                                   deliver_m: Array):
+                state, hists = sharded(keys, step_m, deliver_m)
+                args, vals = jax.vmap(lambda s: _select_best(s, True))(state)
+                return args, vals, hists, jnp.max(state["stale_seen"])
+
+            many = jax.jit(many_sharded_async)
+        elif self._island_mesh is None:
             run = self._run_fn(algo, polish_pass)
 
             def one_job(k: Array) -> tuple[Array, Array, Array]:
@@ -674,7 +1071,13 @@ class IslandOptimizer:
                 keys, NamedSharding(self.mesh, P(cfg.island_axes, None)))
         ctx = self.mesh if self.mesh is not None else _nullcontext()
         with ctx:
-            args, vals, hists = jax.device_get(many(keys))
+            if self._async:
+                step_m, deliver_m = self._materialize_schedule(n_rounds)
+                args, vals, hists, stale = jax.device_get(
+                    many(keys, step_m, deliver_m))
+                self.last_max_staleness = int(np.max(stale))
+            else:
+                args, vals, hists = jax.device_get(many(keys))
 
         n_evals = (init_total + n_rounds * per_round + n_polish * per_polish)
         return [
@@ -727,20 +1130,29 @@ class BucketStepper:
         self.every = max(1, cfg.polish_every)
         self.has_polish = polish_pass is not None
         stacked = cfg.n_islands > 1
-        round_fn = opt._round_fn(algo)
+        if opt._async:
+            # Scheduler-driven async buckets run the deterministic barrier-
+            # cadence schedule (all-ones masks, the AsyncSchedule default):
+            # the resident async program under the default schedule computes
+            # the same values, so the stepped-vs-resident bit-identity
+            # contract (DESIGN.md §12) extends to async buckets.
+            async_round = opt._async_round_fn(algo)
+            ones = jnp.ones((cfg.n_islands,), bool)
+            round_fn = lambda s, rk: async_round(s, rk, ones, ones)  # noqa: E731
+        else:
+            round_fn = opt._round_fn(algo)
         n_rounds = self.n_rounds
+        # Warm-start immigration (launch/federate.py): jitted lazily on the
+        # first bucket that actually carries warm candidates.
+        self._warm_fn = opt._warm_fn(f, algo)
+        self._warm_eval = opt._evaluator(f)
+        self._inject_jit: Callable | None = None
 
         def prep(k: Array) -> tuple[State, Array]:
             # minimize_many's one_job preamble, verbatim: the same split/init/
             # _chain_split discipline, so trajectories match bit-for-bit.
             key, ik = jax.random.split(k)
-            if cfg.portfolio:
-                state = algo.init_stacked(jax.random.split(ik, cfg.n_islands))
-            elif stacked:
-                state = jax.vmap(algo.init)(jax.random.split(ik, cfg.n_islands))
-            else:
-                state = algo.init(ik)
-            return state, _chain_split(key, n_rounds)
+            return opt._init_state(algo, ik), _chain_split(key, n_rounds)
 
         def keys_only(k: Array) -> Array:
             key, _ = jax.random.split(k)
@@ -772,6 +1184,23 @@ class BucketStepper:
         """``keys (J, 2) -> (job-stacked state, round keys (J, n_rounds, 2))``
         — one jitted dispatch, identical to ``minimize_many``'s per-job init."""
         return self._prep(keys)
+
+    def inject(self, state: State, warm) -> State:
+        """Adopt warm-start immigrants (federation migrants, ``OptRequest
+        .warm``) into every job's freshly-initialized state — the jobs-axis
+        form of ``IslandOptimizer._warm_fn``. All jobs in a bucket share one
+        warm batch (it is part of the shape-class), so the candidates are
+        evaluated once and the adoption vmaps over jobs. Donates ``state``."""
+        w = jnp.asarray(warm, jnp.float32)
+        if w.ndim != 2 or w.shape[1] != self.cfg.dim:
+            raise ValueError(
+                f"warm candidates must have shape (W, {self.cfg.dim}), "
+                f"got {w.shape}")
+        if self._inject_jit is None:
+            self._inject_jit = jax.jit(
+                jax.vmap(self._warm_fn, in_axes=(0, None, None)),
+                donate_argnums=0)
+        return self._inject_jit(state, w, self._warm_eval(w))
 
     def round_keys(self, keys: Array) -> Array:
         """Re-derive the ``(J, n_rounds, 2)`` round-key table from job keys

@@ -28,7 +28,7 @@ from typing import Callable
 
 import jax
 import numpy as np
-from jax.sharding import Mesh
+from jax.sharding import Mesh, PartitionSpec
 
 ISLAND_AXIS = "islands"
 
@@ -68,6 +68,20 @@ class MeshConfig:
                 f"n_islands={n_islands} must be a positive multiple of "
                 f"devices={self.devices} (equal-size shards)")
         return n_islands // self.devices
+
+
+def island_specs(axis: str, n_replicated: int = 1) -> tuple[tuple, tuple]:
+    """``(in_specs, out_specs)`` for the engine's round scan under
+    ``shard_map``: the island-stacked state pytree (first argument) shards
+    its leading axis over ``axis``; the ``n_replicated`` trailing scan inputs
+    are replicated to every shard. The barrier engine replicates one input
+    (the round-key table); the async engine (``IslandConfig.sync_policy ==
+    "async"``, DESIGN.md §13) replicates three — round keys plus the
+    step/deliver schedule masks — and every shard slices its local island
+    rows out of them itself, mirroring the key-table discipline."""
+    specs = PartitionSpec(axis)
+    return ((specs, *([PartitionSpec()] * n_replicated)),
+            (specs, PartitionSpec()))
 
 
 def ring_perm(n_shards: int) -> list[tuple[int, int]]:

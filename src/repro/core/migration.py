@@ -24,6 +24,19 @@ Policies:
               every other island sends its best individual there. At most
               ``k``<=2 migrants leave an island per sync round (paper limit).
   none        isolated islands.
+
+Async mailbox (DESIGN.md §13): the staleness-bounded alternative to the
+lockstep exchange. Each island owns a fixed-shape ring buffer of migrant
+batches (``mailbox_init``); on the ticks it completes a round it posts its
+best-k to its ring successor's buffer tagged with its local round counter
+(``mailbox_post`` — a full ring overwrites the oldest entry), and adopts the
+newest entry whose staleness (receiver round minus sender tag) is at most
+``max_staleness`` through the SAME ``_replace_worst`` rule the barrier ring
+uses (``mailbox_adopt`` — staler entries are never adopted). With every
+island on the barrier cadence and ``max_staleness=0`` the adopted batch each
+tick is exactly the rolled migrant tensor ``ring`` computes, which is what
+the async engine's degradation contract rests on
+(``tests/test_async_islands.py``).
 """
 from __future__ import annotations
 
@@ -132,6 +145,117 @@ def starvation(pop: Array, fit: Array, k: int = 2, alive: Array | None = None,
     hpop2 = jnp.where(starving, hpop2, hpop)
     hfit2 = jnp.where(starving, hfit2, hfit)
     return pop.at[host].set(hpop2), fit.at[host].set(hfit2)
+
+
+# -- async staleness-bounded mailbox (DESIGN.md §13) ------------------------
+
+MAILBOX_KEYS = ("mbox_pop", "mbox_fit", "mbox_tag", "mbox_head",
+                "round_ctr", "stale_seen")
+
+
+def mailbox_init(n_islands: int, slots: int, k: int, dim: int) -> dict[str, Array]:
+    """Fresh per-island mailbox state, carried alongside the policy state in
+    the async engine's scan (keys in :data:`MAILBOX_KEYS`):
+
+    * ``mbox_pop (I, S, k, D)`` / ``mbox_fit (I, S, k)`` — ``S`` ring slots of
+      k-migrant batches per island (empty slots carry +inf fitness);
+    * ``mbox_tag (I, S)`` — the sender's round counter per slot, -1 = empty;
+    * ``mbox_head (I,)`` — each ring's write cursor (wraps = overwrite oldest);
+    * ``round_ctr (I,)`` — per-island completed-round counters, the clocks
+      staleness is measured against;
+    * ``stale_seen (I,)`` — high-water mark of adopted-migrant staleness
+      (-1 until an adoption happens), the observability hook the staleness
+      bound is asserted through.
+    """
+    i, s = n_islands, slots
+    return {
+        "mbox_pop": jnp.zeros((i, s, k, dim), jnp.float32),
+        "mbox_fit": jnp.full((i, s, k), jnp.inf, jnp.float32),
+        "mbox_tag": jnp.full((i, s), -1, jnp.int32),
+        "mbox_head": jnp.zeros((i,), jnp.int32),
+        "round_ctr": jnp.zeros((i,), jnp.int32),
+        "stale_seen": jnp.full((i,), -1, jnp.int32),
+    }
+
+
+def mailbox_post(mbox: dict[str, Array], pop: Array, fit: Array, k: int,
+                 post: Array, axis: str | None = None, n_shards: int = 1
+                 ) -> dict[str, Array]:
+    """Each island posts its best-k batch to its ring successor's mailbox.
+
+    ``post (I,)`` gates per *sender* — an island posts only on ticks it
+    completed a round AND the delivery schedule fired (a False models a
+    dropped message; the batch is simply lost, like a dropped datagram).
+    The batch lands at the receiver's write head tagged with the sender's
+    ``round_ctr``; a full ring overwrites the oldest entry. Inside
+    ``shard_map`` the boundary island's batch crosses shards as one
+    ``ppermute`` — the same single hop the barrier ring pays.
+    """
+    best = jnp.argsort(fit, axis=1)[:, :k]                         # (I,k)
+    mig = jnp.take_along_axis(pop, best[..., None], axis=1)        # (I,k,D)
+    migf = jnp.take_along_axis(fit, best, axis=1)                  # (I,k)
+    tag = mbox["round_ctr"]
+    post = post.astype(jnp.int32)
+    if axis is not None and n_shards > 1:
+        perm = ring_perm(n_shards)
+        pm = jax.lax.ppermute(mig[-1], axis, perm)
+        pf_ = jax.lax.ppermute(migf[-1], axis, perm)
+        pt = jax.lax.ppermute(tag[-1], axis, perm)
+        pg = jax.lax.ppermute(post[-1], axis, perm)
+        in_m = jnp.concatenate([pm[None], mig[:-1]], axis=0)
+        in_f = jnp.concatenate([pf_[None], migf[:-1]], axis=0)
+        in_t = jnp.concatenate([pt[None], tag[:-1]], axis=0)
+        in_g = jnp.concatenate([pg[None], post[:-1]], axis=0)
+    else:
+        in_m, in_f = jnp.roll(mig, 1, axis=0), jnp.roll(migf, 1, axis=0)
+        in_t, in_g = jnp.roll(tag, 1, axis=0), jnp.roll(post, 1, axis=0)
+    slots = mbox["mbox_tag"].shape[1]
+
+    def write(bp, bf, bt, h, m, f, t, g):
+        keep = g > 0
+        sel = lambda a, b: jnp.where(keep, a, b)  # noqa: E731
+        return (sel(bp.at[h].set(m), bp), sel(bf.at[h].set(f), bf),
+                sel(bt.at[h].set(t), bt), jnp.where(keep, (h + 1) % slots, h))
+
+    bp, bf, bt, head = jax.vmap(write)(
+        mbox["mbox_pop"], mbox["mbox_fit"], mbox["mbox_tag"],
+        mbox["mbox_head"], in_m, in_f, in_t, in_g)
+    return {**mbox, "mbox_pop": bp, "mbox_fit": bf, "mbox_tag": bt,
+            "mbox_head": head}
+
+
+def mailbox_adopt(mbox: dict[str, Array], pop: Array, fit: Array,
+                  max_staleness: int, gate: Array
+                  ) -> tuple[Array, Array, dict[str, Array]]:
+    """Each island adopts the newest mailbox batch whose staleness — its own
+    ``round_ctr`` minus the sender's tag — is at most ``max_staleness``,
+    through the same worst-k replacement rule the barrier ring uses.
+
+    Entries staler than the bound are never adopted (they age in the ring
+    until overwritten); an adopted slot is consumed (tag reset to -1) so a
+    batch is adopted at most once. ``gate (I,)`` restricts adoption to
+    islands that completed a round this tick. ``stale_seen`` records the
+    high-water mark of adopted staleness. Returns ``(pop, fit, mbox)``.
+    """
+    tags = mbox["mbox_tag"]                                        # (I,S)
+    stale = mbox["round_ctr"][:, None] - tags
+    valid = (tags >= 0) & (stale <= max_staleness)
+    keyed = jnp.where(valid, tags, -1)
+    slot = jnp.argmax(keyed, axis=1)                  # newest valid per island
+    has = jnp.take_along_axis(keyed, slot[:, None], axis=1)[:, 0] >= 0
+    take = has & gate
+    m = jnp.take_along_axis(
+        mbox["mbox_pop"], slot[:, None, None, None], axis=1)[:, 0]  # (I,k,D)
+    f = jnp.take_along_axis(mbox["mbox_fit"], slot[:, None, None], axis=1)[:, 0]
+    npop, nfit = jax.vmap(_replace_worst)(pop, fit, m, f)
+    pop = jnp.where(take[:, None, None], npop, pop)
+    fit = jnp.where(take[:, None], nfit, fit)
+    consumed = tags.at[jnp.arange(tags.shape[0]), slot].set(-1)
+    new_tags = jnp.where(take[:, None], consumed, tags)
+    st = jnp.take_along_axis(stale, slot[:, None], axis=1)[:, 0]
+    seen = jnp.where(take, jnp.maximum(mbox["stale_seen"], st),
+                     mbox["stale_seen"])
+    return pop, fit, {**mbox, "mbox_tag": new_tags, "stale_seen": seen}
 
 
 def migrate(policy: str, pop: Array, fit: Array, k: int = 2,

@@ -253,6 +253,8 @@ class ShapeBucketScheduler:
                     max_evals=req.max_evals, polish=req.polish,
                     polish_every=req.polish_every, polish_topk=req.polish_topk,
                     polish_steps=req.polish_steps, portfolio=req.portfolio,
+                    sync_policy=req.sync_policy,
+                    max_staleness=req.max_staleness,
                 )
                 # Portfolio requests (DESIGN.md §10) run heterogeneous per-island
                 # policies: `algo` is ignored and `params` maps policy name ->
@@ -402,10 +404,18 @@ class ShapeBucketScheduler:
 
     def _run_resident(self, item: _RunItem, opt: IslandOptimizer, f) -> None:
         """Device-resident fallback (sharded/meshed buckets): one opaque
-        ``minimize_many`` dispatch — no streaming, no mid-run preemption."""
+        ``minimize_many`` dispatch — no streaming, no mid-run preemption.
+        Warm-started buckets (``OptRequest.warm``, the federation hop) run
+        per-job ``minimize`` calls instead: warm is value-keyed into the
+        shape-class, so every row shares the same batch."""
         jobs = [j for j in item.rows if j is not None and not j.finished()]
         keys = jnp.stack([jax.random.PRNGKey(j.request.seed) for j in jobs])
-        results = opt.minimize_many(f, keys)
+        warm = jobs[0].request.warm
+        if warm:
+            results = [opt.minimize(f, k, warm=np.asarray(warm, np.float32))
+                       for k in keys]
+        else:
+            results = opt.minimize_many(f, keys)
         with self._mu:
             self.n_dispatches += 1
             self.n_jobs_run += len(jobs)
@@ -440,6 +450,14 @@ class ShapeBucketScheduler:
         if item.resume is None:
             state, round_keys = stepper.init(keys)
             start, hist = 0, []
+            # Federation warm-start (OptRequest.warm, value-keyed into the
+            # shape-class so the whole bucket shares one batch): adopt the
+            # immigrants before round 0. Checkpoints snapshot post-injection
+            # state, so resumed runs never re-inject.
+            req0 = next(j.request for j in rows if j is not None)
+            if req0.warm:
+                state = stepper.inject(
+                    state, np.asarray(req0.warm, np.float32))
         else:
             state = item.resume["state"]
             start = item.resume["start"]
@@ -687,11 +705,12 @@ class ShapeBucketScheduler:
 
     # -- introspection -----------------------------------------------------
 
-    def bucket_status(self) -> dict[str, dict[str, int]]:
-        """Per-bucket lifecycle counts over the jobs the scheduler holds —
-        the service's ``status`` op. Buckets are labeled
-        ``fn|algo|dim=D|#hash`` (hash over the full shape-class)."""
-        out: dict[str, dict[str, int]] = {}
+    def bucket_status(self) -> dict[str, dict[str, Any]]:
+        """Per-bucket lifecycle counts + engine sync policy over the jobs the
+        scheduler holds — the service's ``status`` op. Buckets are labeled
+        ``fn|algo|dim=D|#hash`` (hash over the full shape-class); each entry
+        is ``{"counts": {status: n}, "sync_policy": "barrier"|"async"}``."""
+        out: dict[str, dict[str, Any]] = {}
         with self._mu:
             for job in self._jobs.values():
                 req = job.request
@@ -699,10 +718,18 @@ class ShapeBucketScheduler:
                 h = hashlib.sha256(repr(key).encode()).hexdigest()[:8]
                 algo = "portfolio" if req.portfolio else req.algo
                 label = f"{req.fn}|{algo}|dim={req.dim}|#{h}"
-                counts = out.setdefault(label, {})
+                entry = out.setdefault(
+                    label, {"counts": {}, "sync_policy": req.sync_policy})
                 st = job.response.status
-                counts[st] = counts.get(st, 0) + 1
+                entry["counts"][st] = entry["counts"].get(st, 0) + 1
         return out
+
+    def queue_depth(self) -> int:
+        """Dispatched buckets waiting in the worker-pool priority queue —
+        backlog the pool has accepted but not yet started (the service's
+        ``status`` op reports it alongside the buckets)."""
+        with self._mu:
+            return len(self._ready)
 
     def stats(self) -> dict[str, int]:
         """Queue/dispatch/hardening counters for the service's ``stats`` op."""

@@ -19,7 +19,9 @@ One JSON object per line (JSONL), over stdin/stdout (default) or TCP
                                           "value": ..., "arg": [...], "n_evals": ...}
     {"op": "cancel", "id": "job0"}    -> cooperative preemption at the next
                                          round boundary; partial result kept
-    {"op": "status"}                  -> queued/running/done counts per bucket
+    {"op": "status"}                  -> per-bucket {"counts": {...},
+                                         "sync_policy": ...} + worker-pool
+                                         "queue_depth" (accepted, unstarted)
     {"op": "flush"}                   -> {"flushed": N}
     {"op": "stats"}                   -> scheduler + queue counters
     {"op": "quit"}                    -> {"bye": true}
@@ -175,7 +177,8 @@ class OptimizationService:
         if op == "cancel":
             return sched.cancel(msg["id"])
         if op == "status":
-            return {"buckets": sched.bucket_status()}
+            return {"buckets": sched.bucket_status(),
+                    "queue_depth": sched.queue_depth()}
         if op == "flush":
             return {"flushed": sched.flush()}
         if op == "stats":

@@ -1,0 +1,214 @@
+"""Async staleness-bounded island tests (DESIGN.md §13, ISSUE 8 tentpole).
+
+The two contracts the harness locks down:
+
+* **Degradation**: ``sync_policy="async"`` with ``max_staleness=0`` under the
+  default all-ones schedule is **bit-identical** to the barrier engine — for
+  ``minimize``, ``minimize_many`` and the 1-device mesh, across de/pso/ga/sa.
+  (The async round body applies its step mask *outside* the generation scan
+  precisely so the inner scan stays HLO-identical to the barrier's.)
+* **Record/replay**: an async run under any schedule records the exact
+  step/deliver masks it used (``IslandOptimizer.recorded_schedule``); feeding
+  them back reproduces the run bit-identically, and every adopted migrant's
+  staleness stays ≤ ``max_staleness`` (``last_max_staleness``).
+
+Plus the mailbox edge cases the async path exposes: ring-full overwrite,
+too-stale migrants dropped, and the n_islands=1 self-loop no-op.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ALGORITHMS, AsyncSchedule, IslandConfig, IslandOptimizer
+from repro.core import migration as mig
+from repro.core.mesh import MeshConfig
+from repro.functions import get
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:       # dev-only dep; pip install -r requirements-dev.txt
+    given = None
+
+KEY = jax.random.PRNGKey(7)
+F6 = get("rastrigin", 6)
+ALGOS = ["de", "pso", "ga", "sa"]
+
+
+def _cfg(**kw):
+    base = dict(n_islands=4, pop=16, dim=6, sync_every=3, migration="ring",
+                n_migrants=2, max_evals=3000)
+    base.update(kw)
+    return IslandConfig(**base)
+
+
+def _same(a, b):
+    return (a.value == b.value
+            and np.array_equal(np.asarray(a.arg), np.asarray(b.arg))
+            and np.array_equal(np.asarray(a.history), np.asarray(b.history)))
+
+
+# --- degradation: max_staleness=0 ≡ barrier ---------------------------------
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_async_staleness0_bit_identical_to_barrier(algo):
+    cb = _cfg()
+    ca = dataclasses.replace(cb, sync_policy="async", max_staleness=0)
+    rb = IslandOptimizer(ALGORITHMS[algo], cb).minimize(F6, KEY)
+    oa = IslandOptimizer(ALGORITHMS[algo], ca)
+    ra = oa.minimize(F6, KEY)
+    assert _same(rb, ra)
+    # uniform cadence: every adoption is exactly 0 rounds stale
+    assert oa.last_max_staleness == 0
+
+
+def test_async_staleness0_minimize_many_bit_identical():
+    cb = _cfg()
+    ca = dataclasses.replace(cb, sync_policy="async", max_staleness=0)
+    keys = jax.random.split(jax.random.PRNGKey(3), 3)
+    mb = IslandOptimizer(ALGORITHMS["de"], cb).minimize_many(F6, keys)
+    ma = IslandOptimizer(ALGORITHMS["de"], ca).minimize_many(F6, keys)
+    for rb, ra in zip(mb, ma):
+        assert _same(rb, ra)
+
+
+def test_async_staleness0_one_device_mesh_bit_identical():
+    # degenerate mesh: the shard_map async program must match both the
+    # unsharded async engine and the barrier engine (determinism contract §8)
+    cb = _cfg()
+    ca = dataclasses.replace(cb, sync_policy="async", max_staleness=0)
+    rb = IslandOptimizer(ALGORITHMS["pso"], cb).minimize(F6, KEY)
+    rm = IslandOptimizer(ALGORITHMS["pso"], ca,
+                         mesh_cfg=MeshConfig(devices=1)).minimize(F6, KEY)
+    ru = IslandOptimizer(ALGORITHMS["pso"], ca).minimize(F6, KEY)
+    assert _same(rb, rm)
+    assert _same(ru, rm)
+
+
+# --- record/replay ----------------------------------------------------------
+
+def test_recorded_schedule_replays_bit_identically():
+    ca = _cfg(sync_policy="async", max_staleness=3)
+    o1 = IslandOptimizer(ALGORITHMS["de"], ca, schedule=AsyncSchedule(seed=11))
+    r1 = o1.minimize(F6, KEY)
+    rec = o1.recorded_schedule
+    assert rec is not None and rec.step is not None
+    o2 = IslandOptimizer(ALGORITHMS["de"], ca, schedule=rec)
+    r2 = o2.minimize(F6, KEY)
+    assert _same(r1, r2)
+    # replay records the same concrete masks it was fed
+    assert np.array_equal(np.asarray(o2.recorded_schedule.step),
+                          np.asarray(rec.step))
+    assert np.array_equal(np.asarray(o2.recorded_schedule.deliver),
+                          np.asarray(rec.deliver))
+    # staleness bound holds on the real (non-uniform) schedule
+    assert -1 <= o1.last_max_staleness <= 3
+
+
+def test_async_schedule_actually_desynchronizes():
+    # sanity: a sparse schedule produces a different trajectory than barrier
+    cb = _cfg()
+    ca = dataclasses.replace(cb, sync_policy="async", max_staleness=3)
+    rb = IslandOptimizer(ALGORITHMS["de"], cb).minimize(F6, KEY)
+    ra = IslandOptimizer(ALGORITHMS["de"], ca,
+                         schedule=AsyncSchedule(seed=11)).minimize(F6, KEY)
+    assert not np.array_equal(np.asarray(rb.history), np.asarray(ra.history))
+
+
+def test_cadence_schedule_construction():
+    s = AsyncSchedule.from_cadences([1, 2, 4], n_rounds=8)
+    step, deliver = s.materialize(8, 3)
+    assert step.shape == (8, 3) and deliver.all()
+    assert step[:, 0].all()                      # cadence 1: every tick
+    assert list(step[:, 2]) == [True, False, False, False] * 2
+
+
+# --- mailbox edge cases -----------------------------------------------------
+
+def test_mailbox_ring_full_overwrites_oldest():
+    box = mig.mailbox_init(n_islands=2, slots=2, k=1, dim=3)
+    pop = jnp.arange(2 * 4 * 3, dtype=jnp.float32).reshape(2, 4, 3)
+    fit = jnp.arange(2 * 4, dtype=jnp.float32).reshape(2, 4)
+    post = jnp.ones((2,), bool)
+    for tick in range(3):                       # 3 posts into 2 slots
+        box = mig.mailbox_post(box, pop + tick, fit, k=1, post=post)
+        box = {**box, "round_ctr": box["round_ctr"] + 1}
+    # head wrapped: slot 0 holds the NEWEST batch (tick 2), slot 1 tick 1
+    assert list(np.asarray(box["mbox_head"])) == [1, 1]
+    assert list(np.asarray(box["mbox_tag"])[0]) == [2, 1]
+    # slot 0's payload is the tick-2 emigrant (the tick-0 one is gone)
+    np.testing.assert_array_equal(
+        np.asarray(box["mbox_pop"])[0, 0, 0], np.asarray(pop[1, 0] + 2))
+
+
+def test_mailbox_too_stale_migrant_dropped():
+    box = mig.mailbox_init(n_islands=2, slots=2, k=1, dim=3)
+    pop = jnp.ones((2, 4, 3), jnp.float32)
+    fit = jnp.full((2, 4), 5.0, jnp.float32)
+    box = mig.mailbox_post(box, pop * 0.5, fit * 0.0, k=1,
+                           post=jnp.ones((2,), bool))
+    # sender tagged round 0; receivers are now 4 rounds ahead
+    box = {**box, "round_ctr": jnp.full((2,), 4, jnp.int32)}
+    gate = jnp.ones((2,), bool)
+    npop, nfit, nbox = mig.mailbox_adopt(box, pop, fit, max_staleness=2,
+                                         gate=gate)
+    np.testing.assert_array_equal(np.asarray(npop), np.asarray(pop))
+    np.testing.assert_array_equal(np.asarray(nfit), np.asarray(fit))
+    assert (np.asarray(nbox["stale_seen"]) == -1).all()   # nothing adopted
+    # within the bound the same migrant IS adopted
+    fresh = {**box, "round_ctr": jnp.full((2,), 2, jnp.int32)}
+    npop, nfit, nbox = mig.mailbox_adopt(fresh, pop, fit, max_staleness=2,
+                                         gate=gate)
+    assert not np.array_equal(np.asarray(nfit), np.asarray(fit))
+    assert (np.asarray(nbox["stale_seen"]) == 2).all()
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_async_single_island_is_selfloop_noop(algo):
+    # n_islands=1: the mailbox would be a self-loop, so the engine keeps the
+    # barrier path and async is bit-identical to it by construction
+    cb = _cfg(n_islands=1, pop=24, max_evals=1500)
+    ca = dataclasses.replace(cb, sync_policy="async", max_staleness=2)
+    rb = IslandOptimizer(ALGORITHMS[algo], cb).minimize(F6, KEY)
+    ra = IslandOptimizer(ALGORITHMS[algo], ca).minimize(F6, KEY)
+    assert _same(rb, ra)
+
+
+def test_async_config_validation():
+    with pytest.raises(ValueError, match="sync_policy"):
+        IslandOptimizer(ALGORITHMS["de"], _cfg(sync_policy="nope"))
+    with pytest.raises(ValueError, match="starvation"):
+        IslandOptimizer(ALGORITHMS["de"],
+                        _cfg(sync_policy="async", migration="starvation"))
+    with pytest.raises(ValueError, match="max_staleness"):
+        IslandOptimizer(ALGORITHMS["de"],
+                        _cfg(sync_policy="async", max_staleness=-1))
+    with pytest.raises(ValueError, match="AsyncSchedule"):
+        IslandOptimizer(ALGORITHMS["de"], _cfg(),
+                        schedule=AsyncSchedule(seed=1))
+
+
+# --- property: random schedules replay exactly, staleness stays bounded -----
+
+if given is not None:
+    _CFG = _cfg(pop=8, max_evals=1500, sync_every=2,
+                sync_policy="async", max_staleness=4)
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 2**31 - 1),
+           st.floats(0.3, 1.0), st.floats(0.3, 1.0))
+    def test_random_schedules_replay_and_bound_staleness(seed, p_step,
+                                                         p_deliver):
+        sched = AsyncSchedule(seed=seed, step_prob=p_step,
+                              deliver_prob=p_deliver)
+        o1 = IslandOptimizer(ALGORITHMS["de"], _CFG, schedule=sched)
+        r1 = o1.minimize(F6, KEY)
+        assert -1 <= o1.last_max_staleness <= _CFG.max_staleness
+        o2 = IslandOptimizer(ALGORITHMS["de"], _CFG,
+                             schedule=o1.recorded_schedule)
+        r2 = o2.minimize(F6, KEY)
+        assert _same(r1, r2)
+        assert o2.last_max_staleness == o1.last_max_staleness

@@ -516,13 +516,37 @@ def test_status_op_lists_per_bucket_counts():
     out = svc.handle({"op": "status"})
     assert len(out["buckets"]) == 2
     by_fn = {k.split("|")[0]: v for k, v in out["buckets"].items()}
-    assert by_fn["sphere"] == {"queued": 3}
-    assert by_fn["rastrigin"] == {"queued": 1}
+    assert by_fn["sphere"] == {"counts": {"queued": 3},
+                               "sync_policy": "barrier"}
+    assert by_fn["rastrigin"] == {"counts": {"queued": 1},
+                                  "sync_policy": "barrier"}
+    assert out["queue_depth"] == 0
     svc.handle({"op": "flush"})
     out = svc.handle({"op": "status"})
-    assert {k.split("|")[0]: v for k, v in out["buckets"].items()} == {
+    assert {k.split("|")[0]: v["counts"] for k, v in
+            out["buckets"].items()} == {
         "sphere": {"done": 3}, "rastrigin": {"done": 1}}
     json.dumps(out)                                  # JSONL-serializable
+
+
+def test_status_op_reports_sync_policy_and_queue_depth():
+    # Satellite regression (ISSUE 8): the status op must expose each
+    # bucket's engine sync policy and the worker-pool queue depth — before
+    # the fix it carried only the lifecycle counts.
+    svc = OptimizationService(max_batch=100, flush_ms=1e6)
+    svc.handle({"op": "submit", "request":
+                {"fn": "sphere", "dim": 4, "pop": 16, "n_islands": 2,
+                 "sync_policy": "async", "max_staleness": 2,
+                 "sync_every": 5, "max_evals": 1500, "seed": 0}})
+    svc.handle({"op": "submit", "request":
+                {"fn": "sphere", "dim": 4, "pop": 16, "max_evals": 900}})
+    out = svc.handle({"op": "status"})
+    assert "queue_depth" in out and out["queue_depth"] == 0
+    policies = sorted(v["sync_policy"] for v in out["buckets"].values())
+    assert policies == ["async", "barrier"]
+    # async vs barrier never share a bucket: sync_policy is shape-class
+    assert len(out["buckets"]) == 2
+    json.dumps(out)
 
 
 # --- shape-class properties (hypothesis, test_optim.py conventions) ---------
@@ -545,6 +569,9 @@ _FIELD_VALUES = {
     "polish_topk": [2, 4],
     "polish_steps": [1, 3],
     "params": [{}, {"F": 0.6}, {"F": 0.6, "CR": 0.8}],
+    "sync_policy": ["barrier", "async"],
+    "max_staleness": [0, 2],
+    "warm": [[], [[0.1, 0.2]], [[0.1, 0.2], [0.3, 0.4]]],
 }
 
 if given is not None:

@@ -40,6 +40,7 @@ MODULES = (
     "repro.core.mc",
     "repro.checkpoint.store",
     "repro.launch.opt_serve",
+    "repro.launch.federate",
     "repro.optim.descent",
     "repro.optim.numgrad",
     "repro.optim.adam",
